@@ -1,0 +1,395 @@
+"""One benchmark per paper figure/table (DESIGN.md §6 index).
+
+Each function returns (derived_dict, csv_rows); benchmarks/run.py times them
+and emits the ``name,us_per_call,derived`` CSV contract.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import carbon as CB
+from repro.core import catalog as CAT
+from repro.core import config_graph as CG
+from repro.core import objective as OBJ
+from repro.core import perf_model as PM
+from repro.core import slices as SL
+from repro.serving import simulator as SIM
+
+TRACE_HOURS = 48.0
+N_BLOCKS = 4
+APPS = ("efficientnet", "albert", "yolov5")
+
+_trace_cache: Dict[str, CB.CarbonTrace] = {}
+_report_cache: Dict[tuple, SIM.SimReport] = {}
+
+
+def trace(region="CISO-March", hours=TRACE_HOURS):
+    key = f"{region}:{hours}"
+    if key not in _trace_cache:
+        _trace_cache[key] = CB.make_trace(region, hours=hours)
+    return _trace_cache[key]
+
+
+def report(scheme, family, region="CISO-March", hours=TRACE_HOURS, **simkw):
+    key = (scheme, family, region, hours, tuple(sorted(simkw.items())))
+    if key not in _report_cache:
+        _report_cache[key] = SIM.run_trace(
+            scheme, family, trace(region, hours),
+            SIM.SimConfig(n_blocks=N_BLOCKS, **simkw))
+    return _report_cache[key]
+
+
+# =============================================================================
+# Fig. 2 — mixed-quality frontier (carbon saving vs accuracy)
+# =============================================================================
+def fig02_mixed_quality():
+    """Two frontiers: (a) unpartitioned mixed-quality (the paper's Fig. 2
+    setting — each block hosts one variant on all 16 chips); (b) the full
+    mixed-quality × partitioning space Clover actually exploits.  On TPU the
+    unpartitioned span is narrower than the paper's A100 measurement (flatter
+    busy-power curve — DESIGN.md §2 changed assumptions); partitioning
+    recovers the paper's 60–80 % range."""
+    variants = CAT.get_family("efficientnet")
+    base = CG.ConfigGraph.uniform("efficientnet", "B7", 16, N_BLOCKS)
+    arrival = OBJ.evaluate(base, variants, 1e-9).capacity_rps * 0.7
+    res_base = OBJ.evaluate(base, variants, arrival)
+    rows = []
+    names = [v.name for v in variants]
+    for mix in itertools.combinations_with_replacement(names, N_BLOCKS):
+        w: Dict = {}
+        for m in mix:
+            w[(m, 16)] = w.get((m, 16), 0) + 1
+        g = CG.ConfigGraph.from_dict("efficientnet", w)
+        r = OBJ.evaluate(g, variants, arrival)
+        save = (1 - r.energy_per_req_j / res_base.energy_per_req_j) * 100
+        rows.append(("unpartitioned", ",".join(mix), save,
+                     r.accuracy / res_base.accuracy))
+    # (b) mixed quality × slice sizes (uniform per block over the catalog)
+    for part in SL.partition_catalog():
+        sizes = sorted(set(part), reverse=True)
+        for choice in itertools.product(names, repeat=len(sizes)):
+            vmap = dict(zip(sizes, choice))
+            w = {}
+            for s in part:
+                e = (vmap[s], s)
+                w[e] = w.get(e, 0) + N_BLOCKS
+            g = CG.ConfigGraph.from_dict("efficientnet", w)
+            r = OBJ.evaluate(g, variants, arrival)
+            save = (1 - r.energy_per_req_j / res_base.energy_per_req_j) * 100
+            rows.append(("partitioned", "|".join(f"{v}@{s}c" for s, v in vmap.items()),
+                         save, r.accuracy / res_base.accuracy))
+    def best_at(loss):
+        ok = [r for r in rows if r[3] >= 1 - loss]
+        return max((r[2] for r in ok), default=0.0)
+    derived = {
+        "n_points": len(rows),
+        "unpartitioned_max_saving_pct": max(r[2] for r in rows
+                                            if r[0] == "unpartitioned"),
+        "max_saving_at_5pct_loss": round(best_at(0.05), 1),
+        "max_saving_at_10pct_loss": round(best_at(0.10), 1),
+    }
+    csv = [("space", "mix", "carbon_saving_pct", "rel_accuracy")] + rows
+    return derived, csv
+
+
+# =============================================================================
+# Fig. 3 — GPU partitioning: carbon vs latency (same variant, C1/C2/C3)
+# =============================================================================
+def fig03_partitioning():
+    variants = CAT.get_family("efficientnet")
+    v = variants[2]                      # B5, fixed quality (paper keeps variant fixed)
+    configs = {"C1": (16,), "C2": (8, 4, 2, 1, 1), "C3": (1,) * 16}
+    base_g = CG.ConfigGraph.uniform("efficientnet", v.name, 16, N_BLOCKS)
+    arrival = OBJ.evaluate(base_g, variants, 1e-9).capacity_rps * 0.7
+    rows, derived = [], {}
+    base_carbon = base_lat = None
+    for name, part in configs.items():
+        w: Dict = {}
+        for chips in part:
+            w[(v.name, chips)] = w.get((v.name, chips), 0) + N_BLOCKS
+        g = CG.ConfigGraph.from_dict("efficientnet", w)
+        r = OBJ.evaluate(g, variants, arrival)
+        lat = PM.cached_point(v, min(part)).latency_s
+        if name == "C1":
+            base_carbon, base_lat = r.energy_per_req_j, lat
+        rows.append((name, r.energy_per_req_j, lat, r.p95_latency_s))
+    derived["carbon_reduction_C3_vs_C1_pct"] = \
+        (1 - rows[2][1] / rows[0][1]) * 100
+    derived["latency_increase_C3_vs_C1_x"] = rows[2][2] / rows[0][2]
+    csv = [("config", "energy_per_req_j", "slice_latency_s", "p95_s")] + rows
+    return derived, csv
+
+
+# =============================================================================
+# Fig. 8 — carbon traces used for evaluation
+# =============================================================================
+def fig08_traces():
+    rows = [("region", "min_gco2", "max_gco2", "mean_gco2", "max_halfday_swing")]
+    derived = {}
+    for region in ("CISO-March", "CISO-September", "ESO-March"):
+        tr = trace(region)
+        half = int(12 * 3600 / (tr.times_s[1] - tr.times_s[0]))
+        swing = max(np.ptp(tr.intensity[i:i + half])
+                    for i in range(0, len(tr.intensity) - half, half))
+        rows.append((region, tr.intensity.min(), tr.intensity.max(),
+                     tr.mean(), swing))
+        derived[f"{region}_swing"] = round(float(swing), 1)
+    return derived, rows
+
+
+# =============================================================================
+# Fig. 9 — Clover vs BASE per application (48 h CISO-March)
+# =============================================================================
+def fig09_effectiveness():
+    rows = [("app", "carbon_saving_pct", "accuracy_delta_pct", "p95_vs_sla")]
+    savings, dacc = [], []
+    for app in APPS:
+        base = report("BASE", app)
+        clv = report("CLOVER", app)
+        s = (1 - clv.carbon_per_req_g() / base.carbon_per_req_g()) * 100
+        da = (clv.accuracy - base.accuracy) / base.accuracy * 100
+        rows.append((app, s, da, clv.p95_latency_s / clv.sla_target_s))
+        savings.append(s)
+        dacc.append(da)
+    derived = {"mean_carbon_saving_pct": float(np.mean(savings)),
+               "mean_accuracy_delta_pct": float(np.mean(dacc)),
+               "all_sla_met": all(r[3] <= 1.05 for r in rows[1:])}
+    return derived, rows
+
+
+# =============================================================================
+# Fig. 10 — scheme comparison (accuracy gain vs carbon saved)
+# =============================================================================
+def fig10_schemes():
+    rows = [("app", "scheme", "carbon_saving_pct", "accuracy_delta_pct", "f")]
+    derived = {}
+    for app in APPS:
+        base = report("BASE", app)
+        for scheme in ("CO2OPT", "BLOVER", "CLOVER", "ORACLE"):
+            r = report(scheme, app)
+            s = (1 - r.carbon_per_req_g() / base.carbon_per_req_g()) * 100
+            da = (r.accuracy - base.accuracy) / base.accuracy * 100
+            rows.append((app, scheme, s, da, 0.1 * s + 0.9 * da))
+        f = {sch: next(r[4] for r in rows[1:]
+                       if r[0] == app and r[1] == sch)
+             for sch in ("CO2OPT", "BLOVER", "CLOVER", "ORACLE")}
+        derived[f"{app}_clover_vs_oracle"] = round(f["CLOVER"] / max(f["ORACLE"], 1e-9), 3)
+        derived[f"{app}_clover_beats_blover"] = bool(f["CLOVER"] > f["BLOVER"])
+    return derived, rows
+
+
+# =============================================================================
+# Fig. 11 — objective over time
+# =============================================================================
+def fig11_objective_timeline():
+    rows = [("scheme", "t_s", "f")]
+    derived = {}
+    for scheme in ("CO2OPT", "BLOVER", "CLOVER", "ORACLE"):
+        r = report(scheme, "efficientnet")
+        tl = r.timeline
+        for i in range(0, len(tl["t"]), 30):
+            rows.append((scheme, float(tl["t"][i]), float(tl["f"][i])))
+        derived[f"{scheme}_mean_f"] = round(float(np.mean(tl["f"])), 2)
+    derived["clover_tracks_oracle"] = bool(
+        derived["CLOVER_mean_f"] >= 0.75 * derived["ORACLE_mean_f"])
+    return derived, rows
+
+
+# =============================================================================
+# Fig. 12 — optimization overhead + SLA-compliant evaluations
+# =============================================================================
+def fig12_overhead():
+    rows = [("scheme", "opt_time_pct", "n_evals", "evals_sla_ok_pct")]
+    derived = {}
+    for scheme in ("BLOVER", "CLOVER"):
+        r = report(scheme, "efficientnet")
+        ok_pct = r.evals_sla_ok / max(r.n_evals, 1) * 100
+        rows.append((scheme, r.opt_time_frac * 100, r.n_evals, ok_pct))
+        derived[f"{scheme.lower()}_opt_pct"] = round(r.opt_time_frac * 100, 2)
+        derived[f"{scheme.lower()}_evals"] = r.n_evals
+        derived[f"{scheme.lower()}_evals_sla_ok_pct"] = round(ok_pct, 1)
+    derived["clover_fewer_evals"] = bool(
+        derived["clover_evals"] <= derived["blover_evals"])
+    derived["clover_more_compliant"] = bool(
+        derived["clover_evals_sla_ok_pct"] >= derived["blover_evals_sla_ok_pct"])
+    return derived, rows
+
+
+# =============================================================================
+# Fig. 13 — SA trajectory of selected invocations
+# =============================================================================
+def fig13_trajectory():
+    import random
+    from repro.core import annealing as SA
+    from repro.core import schemes as SCH
+    ctx, arrival = SIM.make_context("efficientnet", SIM.SimConfig(n_blocks=N_BLOCKS))
+    ev = ctx.evaluator()
+    rows = [("invocation", "eval_idx", "f", "sla_ok")]
+    start = SCH.base_config(ctx)
+    outs = []
+    for i, ci in enumerate((350.0, 250.0, 120.0)):
+        out = SA.anneal(start, ctx.variants, ev, ci, ctx.obj_cfg, ctx.sa_cfg,
+                        rng=random.Random(i))
+        for j, e in enumerate(out.evaluations):
+            rows.append((i + 1, j, e.f, e.sla_ok))
+        start = out.best
+        outs.append(out)
+    derived = {
+        "inv1_evals": outs[0].n_evals,
+        "inv3_evals": outs[2].n_evals,
+        "later_invocations_more_compliant": bool(
+            outs[2].sla_compliant_frac >= outs[0].sla_compliant_frac),
+    }
+    return derived, rows
+
+
+# =============================================================================
+# Fig. 14 — λ sweep + accuracy-loss threshold mode
+# =============================================================================
+def fig14_lambda(hours=12.0):
+    rows = [("mode", "value", "carbon_saving_pct", "accuracy_delta_pct")]
+    base = report("BASE", "efficientnet", hours=hours)
+    derived = {}
+    saves = []
+    for lam in (0.1, 0.5, 0.9):
+        r = report("CLOVER", "efficientnet", hours=hours, lam=lam)
+        s = (1 - r.carbon_per_req_g() / base.carbon_per_req_g()) * 100
+        da = (r.accuracy - base.accuracy) / base.accuracy * 100
+        rows.append(("lambda", lam, s, da))
+        saves.append(s)
+    derived["saving_monotone_in_lambda"] = bool(
+        saves[0] <= saves[1] + 2 and saves[1] <= saves[2] + 2)
+    for thr in (0.2, 0.8):
+        r = report("CLOVER", "efficientnet", hours=hours,
+                   accuracy_threshold_pct=thr)
+        s = (1 - r.carbon_per_req_g() / base.carbon_per_req_g()) * 100
+        da = (r.accuracy - base.accuracy) / base.accuracy * 100
+        rows.append(("acc_threshold", thr, s, da))
+        derived[f"thr{thr}_saving"] = round(s, 1)
+        derived[f"thr{thr}_dacc_ok"] = bool(-da <= thr + 0.05)
+    return derived, rows
+
+
+# =============================================================================
+# Fig. 15 — consolidation: fewer blocks under Clover still meet the SLA
+# =============================================================================
+def fig15_consolidation(hours=6.0):
+    """Provisioning fewer blocks at fixed offered load (paper Fig. 15).
+
+    Clover's consolidated configurations come from the *elastic-scaling path*
+    the paper's additivity property enables (§4.2): the converged 4-block
+    configuration's per-block quotient is kept when blocks are removed
+    (Controller.scale_blocks), exactly how an operator would shrink the
+    fleet — not a cold restart at 1 block."""
+    import random
+    from repro.core import annealing as SA
+    from repro.core import controller as CTRL
+    from repro.core import schemes as SCH
+    ctx, arrival = SIM.make_context("efficientnet", SIM.SimConfig(n_blocks=N_BLOCKS))
+    base_eval = OBJ.evaluate(SCH.base_config(ctx), ctx.variants, arrival)
+    sla = ctx.obj_cfg.l_tail_s
+    # converge Clover once at 4 blocks (big budget)
+    big = SA.SAConfig(stale_limit=25, time_limit_s=600.0)
+    out = SA.anneal(SCH.base_config(ctx), ctx.variants, ctx.evaluator(), 250.0,
+                    ctx.obj_cfg, big, rng=random.Random(0))
+    ctrl = CTRL.Controller(SCH.make_scheme("BASE"), ctx)
+    ctrl.config = out.best
+
+    rows = [("scheme", "n_blocks", "p95_vs_sla", "carbon_saving_pct")]
+    derived = {}
+    for nb in (N_BLOCKS, 2, 1):
+        # BASE shrunk: highest-quality unpartitioned on nb blocks
+        gb = CG.ConfigGraph.uniform("efficientnet",
+                                    max(ctx.variants, key=lambda v: v.quality).name,
+                                    16, nb)
+        rb = OBJ.evaluate(gb, ctx.variants, arrival)
+        rows.append(("BASE", nb, rb.p95_latency_s / sla,
+                     (1 - rb.energy_per_req_j / base_eval.energy_per_req_j) * 100))
+        derived[f"BASE_{nb}blocks_sla_ratio"] = round(
+            min(rb.p95_latency_s / sla, 1e6), 2)
+        # CLOVER scaled via additivity
+        per_block = {e: max(w // N_BLOCKS, 1) for e, w in out.best.edges}
+        gq = CG.ConfigGraph.from_dict("efficientnet",
+                                      {e: w * nb for e, w in per_block.items()})
+        rc = OBJ.evaluate(gq, ctx.variants, arrival)
+        rows.append(("CLOVER", nb, rc.p95_latency_s / sla,
+                     (1 - rc.energy_per_req_j / base_eval.energy_per_req_j) * 100))
+        derived[f"CLOVER_{nb}blocks_sla_ratio"] = round(
+            min(rc.p95_latency_s / sla, 1e6), 2)
+    derived["clover_meets_sla_at_quarter_capacity"] = bool(
+        derived["CLOVER_1blocks_sla_ratio"] <= 1.1)
+    derived["base_violates_when_shrunk"] = bool(
+        derived["BASE_1blocks_sla_ratio"] > derived["BASE_4blocks_sla_ratio"])
+    return derived, rows
+
+
+# =============================================================================
+# Fig. 16 — geographies / seasons
+# =============================================================================
+def fig16_geo(hours=24.0):
+    rows = [("region", "app", "carbon_saving_pct", "accuracy_delta_pct")]
+    derived = {}
+    for region in ("CISO-March", "CISO-September", "ESO-March"):
+        saves = []
+        for app in APPS:
+            base = report("BASE", app, region=region, hours=hours)
+            r = report("CLOVER", app, region=region, hours=hours)
+            s = (1 - r.carbon_per_req_g() / base.carbon_per_req_g()) * 100
+            da = (r.accuracy - base.accuracy) / base.accuracy * 100
+            rows.append((region, app, s, da))
+            saves.append(s)
+        derived[f"{region}_mean_saving"] = round(float(np.mean(saves)), 1)
+    derived["effective_everywhere"] = all(
+        v > 30 for k, v in derived.items() if k.endswith("_mean_saving"))
+    return derived, rows
+
+
+# =============================================================================
+# §5.2.1 — ChatGPT-scale savings estimate
+# =============================================================================
+def table_chatgpt_estimate():
+    base = report("BASE", "albert")
+    clv = report("CLOVER", "albert")
+    per_req_saving_g = base.carbon_per_req_g() - clv.carbon_per_req_g()
+    visitors = 25e6
+    kg_per_day = per_req_saving_g * visitors / 1000.0
+    km_gasoline_car = kg_per_day / 0.251       # EPA: ~251 gCO2/km
+    derived = {"saving_g_per_request": round(per_req_saving_g, 4),
+               "kg_co2_per_day_25M_requests": round(kg_per_day, 1),
+               "equiv_gasoline_car_km_per_day": round(km_gasoline_car, 0)}
+    rows = [("metric", "value")] + [(k, v) for k, v in derived.items()]
+    return derived, rows
+
+
+# =============================================================================
+# Beyond-paper: Clover over the assigned LM architecture ladders
+# =============================================================================
+def table_lm_serving(hours=12.0):
+    """The paper's technique applied to the assigned-pool LM architectures:
+    each arch becomes a Clover family via its AutoML-style depth ladder
+    (core/catalog.lm_ladder) — carbon-aware LLM serving across model classes
+    (dense / MoE / SSM / hybrid).  Demonstrates DESIGN.md §Arch-applicability:
+    no assigned architecture is inapplicable to the serving technique."""
+    rows = [("arch", "family_kind", "carbon_saving_pct", "accuracy_delta_pct",
+             "p95_vs_sla", "opt_time_pct")]
+    derived = {}
+    archs = (("qwen3-1.7b", "dense"), ("qwen3-moe-30b-a3b", "moe"),
+             ("mamba2-2.7b", "ssm"), ("zamba2-2.7b", "hybrid"),
+             ("glm4-9b", "dense"))
+    for arch, kind in archs:
+        base = report("BASE", arch, hours=hours)
+        clv = report("CLOVER", arch, hours=hours)
+        s = (1 - clv.carbon_per_req_g() / base.carbon_per_req_g()) * 100
+        da = (clv.accuracy - base.accuracy) / base.accuracy * 100
+        rows.append((arch, kind, s, da, clv.p95_latency_s / clv.sla_target_s,
+                     clv.opt_time_frac * 100))
+        derived[f"{arch}_saving"] = round(s, 1)
+    derived["all_sla_met"] = all(r[4] <= 1.05 for r in rows[1:])
+    # LM ladders span a narrower latency/energy range than the CNN families
+    # (every variant is a large always-busy model), so savings are smaller
+    # than the paper apps' — the mechanism still transfers to every family.
+    derived["all_save_carbon"] = all(r[2] > 5 for r in rows[1:])
+    return derived, rows

@@ -1,0 +1,97 @@
+"""Benchmark harness — one function per paper table/figure + roofline tables.
+
+Prints the ``name,us_per_call,derived`` CSV contract (one line per benchmark)
+and writes the full per-figure CSVs to benchmarks/out/.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig09] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+
+def _benchmarks(fast: bool):
+    from benchmarks import paper_figs as F
+    if fast:
+        F.TRACE_HOURS = 6.0
+    items = [
+        ("fig02_mixed_quality", F.fig02_mixed_quality),
+        ("fig03_partitioning", F.fig03_partitioning),
+        ("fig08_traces", F.fig08_traces),
+        ("fig09_effectiveness", F.fig09_effectiveness),
+        ("fig10_schemes", F.fig10_schemes),
+        ("fig11_objective_timeline", F.fig11_objective_timeline),
+        ("fig12_overhead", F.fig12_overhead),
+        ("fig13_trajectory", F.fig13_trajectory),
+        ("fig14_lambda", F.fig14_lambda),
+        ("fig15_consolidation", F.fig15_consolidation),
+        ("fig16_geo", F.fig16_geo),
+        ("table_chatgpt", F.table_chatgpt_estimate),
+        ("table_lm_serving", F.table_lm_serving),
+        ("roofline_baseline", _roofline_bench),
+    ]
+    return items
+
+
+def _roofline_bench():
+    """Roofline terms for every compiled dry-run cell (single-pod mesh)."""
+    from repro.launch import roofline as RL
+    path = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.json")
+    if not os.path.exists(path):
+        return {"skipped": "run repro.launch.dryrun first"}, [("missing",)]
+    rows = RL.analyze_file(path, mesh="16x16")
+    csv_rows = [("arch", "shape", "t_compute_s", "t_memory_s", "t_coll_s",
+                 "dominant", "useful_ratio", "roofline_frac", "mem_gib")]
+    for r in rows:
+        csv_rows.append((r["arch"], r["shape"], r["t_compute_s"],
+                         r["t_memory_s"], r["t_collective_s"], r["dominant"],
+                         round(r["useful_flops_ratio"], 3),
+                         round(r["roofline_fraction"], 4),
+                         round(r["mem_footprint_gib"], 2)))
+    dom = {}
+    for r in rows:
+        dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+    derived = {"cells": len(rows), "dominant_counts": dom,
+               "median_roofline_frac": round(
+                   sorted(x["roofline_fraction"] for x in rows)[len(rows) // 2], 4)}
+    return derived, csv_rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="6 h traces instead of 48 h")
+    args = ap.parse_args(argv)
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in _benchmarks(args.fast):
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            derived, rows = fn()
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{name},ERROR,{e!r}", flush=True)
+            continue
+        us = (time.perf_counter() - t0) * 1e6
+        with open(os.path.join(OUT_DIR, f"{name}.csv"), "w", newline="") as f:
+            csv.writer(f).writerows(rows)
+        print(f"{name},{us:.0f},\"{json.dumps(derived)}\"", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

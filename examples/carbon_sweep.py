@@ -1,0 +1,52 @@
+"""Carbon-trace sweep: Clover vs all competing schemes across three grids
+and the λ trade-off knob (paper Figs. 10/14/16 in one script).
+
+Run:  PYTHONPATH=src python examples/carbon_sweep.py [--hours 12]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import carbon as CB
+from repro.serving import simulator as SIM
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hours", type=float, default=12.0)
+    ap.add_argument("--family", default="efficientnet")
+    args = ap.parse_args()
+
+    print(f"=== scheme comparison, {args.family}, CISO-March {args.hours:.0f}h ===")
+    tr = CB.make_trace("CISO-March", hours=args.hours)
+    reports = SIM.compare_schemes(args.family, tr, sim=SIM.SimConfig(n_blocks=4))
+    sv = SIM.savings_vs_base(reports)
+    print(f"{'scheme':8s} {'carbon↓%':>9s} {'Δacc%':>7s} {'p95/SLA':>8s} {'opt%':>6s}")
+    for name, v in sv.items():
+        print(f"{name:8s} {v['carbon_saving_pct']:9.1f} "
+              f"{v['accuracy_delta_pct']:7.2f} {v['p95_vs_sla']:8.2f} "
+              f"{v['opt_time_frac_pct']:6.2f}")
+
+    print("\n=== geographic robustness (CLOVER vs BASE) ===")
+    for region in ("CISO-March", "CISO-September", "ESO-March"):
+        tr = CB.make_trace(region, hours=args.hours)
+        rep = SIM.compare_schemes(args.family, tr, schemes=("BASE", "CLOVER"),
+                                  sim=SIM.SimConfig(n_blocks=4))
+        v = SIM.savings_vs_base(rep)["CLOVER"]
+        print(f"{region:16s} carbon↓ {v['carbon_saving_pct']:5.1f}%  "
+              f"Δacc {v['accuracy_delta_pct']:+.2f}%  p95/SLA {v['p95_vs_sla']:.2f}")
+
+    print("\n=== λ sweep (carbon-vs-accuracy weighting) ===")
+    tr = CB.make_trace("CISO-March", hours=args.hours)
+    for lam in (0.1, 0.5, 0.9):
+        rep = SIM.compare_schemes(args.family, tr, schemes=("BASE", "CLOVER"),
+                                  sim=SIM.SimConfig(n_blocks=4, lam=lam))
+        v = SIM.savings_vs_base(rep)["CLOVER"]
+        print(f"λ={lam:.1f}: carbon↓ {v['carbon_saving_pct']:5.1f}%  "
+              f"Δacc {v['accuracy_delta_pct']:+.2f}%")
+
+
+if __name__ == "__main__":
+    main()

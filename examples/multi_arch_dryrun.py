@@ -1,0 +1,47 @@
+"""Multi-architecture launcher demo: select any assigned architecture by id,
+build its production train/serve step against the pod mesh, and report the
+compiled memory/flop/collective profile — the `--arch` surface of the
+framework (subset of the full dry-run for interactive use).
+
+Run:  PYTHONPATH=src python examples/multi_arch_dryrun.py --arch glm4-9b \
+          --shape decode_32k
+(Heavy: builds the 256-device mesh via forced host devices in a subprocess-
+safe way — this example sets XLA_FLAGS itself and must run standalone.)
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    from repro.configs import ARCHS
+    from repro.configs import shapes as SH
+    from repro.launch import dryrun
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b", choices=ARCHS)
+    ap.add_argument("--shape", default="decode_32k", choices=list(SH.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    res = dryrun.run_cell(args.arch, args.shape, args.multi_pod)
+    if res.get("skipped"):
+        print(f"skipped: {res['reason']}")
+        return
+    print(f"\ncompiled {args.arch} × {args.shape} on {res['mesh']} "
+          f"({res['devices']} chips):")
+    print(f"  dot FLOPs/device : {res['dot_flops_per_device']:.3e}")
+    print(f"  peak HBM/device  : {res['memory']['peak_per_device_bytes']/2**30:.2f} GiB")
+    print(f"  collective bytes : {res['collectives']['total_collective_bytes']/2**20:.1f} MiB/device")
+    for kind, n in res["collectives"]["collective_counts"].items():
+        if n:
+            print(f"    {kind:20s} ×{n:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Quickstart: the Clover public API in ~60 lines.
+
+  1. pick a model family with quality variants,
+  2. build a configuration graph,
+  3. evaluate accuracy / carbon / latency at an arrival rate,
+  4. run one carbon-aware optimization invocation,
+  5. watch the controller react to carbon-intensity changes.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import random
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import annealing as SA
+from repro.core import carbon as CB
+from repro.core import catalog as CAT
+from repro.core import config_graph as CG
+from repro.core import controller as CTRL
+from repro.core import objective as OBJ
+from repro.core import schemes as SCH
+
+# 1. a model family: EfficientNet-B1..B7 with published accuracy/FLOPs
+variants = CAT.get_family("efficientnet")
+print("variants:", [(v.name, v.accuracy, f"{v.flops_g}GF") for v in variants])
+
+# 2. the carbon-unaware baseline: highest quality on unpartitioned blocks
+ctx = SCH.SchemeContext("efficientnet", variants, n_blocks=2, arrival_rps=0.0,
+                        obj_cfg=None, sa_cfg=SA.SAConfig(),
+                        rng=random.Random(0))
+base = SCH.base_config(ctx)
+arrival = OBJ.evaluate(base, variants, 1e-9).capacity_rps * 0.7
+base_res = OBJ.evaluate(base, variants, arrival)
+print(f"\nBASE: accuracy={base_res.accuracy:.3f} "
+      f"energy/req={base_res.energy_per_req_j:.1f}J "
+      f"p95={base_res.p95_latency_s*1e3:.1f}ms")
+
+# 3. the optimization objective (Eq. 1-5)
+obj = OBJ.ObjectiveConfig(lam=0.1, a_base=base_res.accuracy,
+                          c_base=base_res.carbon_per_req_g(380.0),
+                          l_tail_s=base_res.p95_latency_s)
+ctx.obj_cfg, ctx.arrival_rps = obj, arrival
+
+# 4. one Clover invocation at high carbon intensity
+out = SA.anneal(base, variants, ctx.evaluator(), ci=350.0, obj_cfg=obj,
+                rng=random.Random(0))
+best = OBJ.evaluate(out.best, variants, arrival)
+print(f"\nCLOVER @ci=350: f={out.best_f:.2f} after {out.n_evals} evaluations")
+print(f"  config: {dict(out.best.edges)}")
+print(f"  accuracy={best.accuracy:.3f} ({(best.accuracy/base_res.accuracy-1)*100:+.2f}%)"
+      f" energy/req={best.energy_per_req_j:.1f}J "
+      f"({(1-best.energy_per_req_j/base_res.energy_per_req_j)*100:.0f}% saved)"
+      f" p95={best.p95_latency_s*1e3:.1f}ms (SLA {obj.l_tail_s*1e3:.1f}ms)")
+
+# 5. the controller reacts to the grid
+trace = CB.make_trace("CISO-March", hours=24)
+ctrl = CTRL.Controller(SCH.make_scheme("CLOVER"), ctx)
+ctrl.start(0.0, trace.at(0.0))
+reconfigs = 0
+for t in range(0, int(trace.duration_s), 600):
+    cfg, outcome = ctrl.maybe_reoptimize(float(t), trace.at(float(t)))
+    if outcome is not None:
+        reconfigs += 1
+print(f"\ncontroller: {reconfigs} re-optimizations over 24 h "
+      f"(CI threshold 5%); final config {dict(ctrl.config.edges)}")

@@ -1,0 +1,83 @@
+"""End-to-end driver: serve a REAL (reduced) LM with batched requests under
+Clover's carbon-aware control — actual JAX forward/decode on this host, real
+measured latencies, real reconfiguration.
+
+This is the inference-serving end-to-end example the paper's kind dictates
+(its training counterpart is repro/launch/train.py).
+
+Run:  PYTHONPATH=src python examples/serve_clover.py [--requests 24]
+"""
+import argparse
+import os
+import random
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--requests", type=int, default=24)
+    args = ap.parse_args()
+
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.core import annealing as SA
+    from repro.core import carbon as CB
+    from repro.core import config_graph as CG
+    from repro.core import objective as OBJ
+    from repro.serving import engine as ENG
+
+    print(f"=== Clover real-execution serving demo ({args.arch} ladder) ===")
+    base_cfg = get_smoke_config(args.arch).with_(n_layers=12, dtype=jnp.float32)
+    family = ENG.build_engine_family(base_cfg, fracs=(1.0, 0.5, 1.0 / 6))
+    variants = [ev.variant for ev in family]
+    for ev in family:
+        print(f"  variant {ev.variant.name}: {ev.cfg.n_layers} layers, "
+              f"{ev.variant.params_m:.2f}M params, acc proxy {ev.variant.accuracy}")
+
+    eng = ENG.RealEngine(family)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, base_cfg.vocab_size, size=(1, 6)).astype(np.int32)
+               for _ in range(args.requests)]
+
+    # --- BASE: highest quality on the whole block --------------------------------
+    g_base = CG.ConfigGraph.from_dict(base_cfg.name, {("x1", 16): 1})
+    eng.configure(g_base)
+    m_base = eng.serve(prompts, n_new=6)
+    print(f"\nBASE   : p95={m_base['p95_s']*1e3:7.1f}ms "
+          f"energy={m_base['energy_j']:8.1f}J acc={m_base['mean_accuracy']:.3f}")
+
+    # --- Clover: optimize against REAL measured latencies/energy -----------------
+    trace = CB.make_trace("CISO-March", hours=2)
+    obj = OBJ.ObjectiveConfig(
+        lam=0.6, a_base=m_base["mean_accuracy"],
+        c_base=m_base["energy_j"] / m_base["served"] / 3.6e6 * 380 * 1.5,
+        l_tail_s=m_base["p95_s"] * 1.5)
+    probe = prompts[:6]
+
+    def evaluator(graph):
+        eng.configure(graph)
+        m = eng.serve(probe, n_new=6)
+        return OBJ.EvalResult(m["mean_accuracy"], 1.0 / max(m["p50_s"], 1e-9),
+                              0.5, m["p95_s"], 0.0, m["energy_j"] / m["served"])
+
+    for ci in (trace.at(0), trace.at(12 * 3600)):
+        out = SA.anneal(g_base, variants, evaluator, ci=ci, obj_cfg=obj,
+                        sa_cfg=SA.SAConfig(stale_limit=6, eval_window_s=0.0),
+                        rng=random.Random(1))
+        eng.configure(out.best)
+        m = eng.serve(prompts, n_new=6)
+        save = (1 - m["energy_j"] / m_base["energy_j"]) * 100
+        print(f"CLOVER @ci={ci:5.0f}: cfg={dict(out.best.edges)} "
+              f"p95={m['p95_s']*1e3:7.1f}ms energy={m['energy_j']:8.1f}J "
+              f"acc={m['mean_accuracy']:.3f}  ({save:+.0f}% energy, "
+              f"{out.n_evals} real evals)")
+    print("\nOK — Clover reconfigured a live JAX serving engine end to end.")
+
+
+if __name__ == "__main__":
+    main()

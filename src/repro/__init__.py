@@ -1,0 +1,3 @@
+"""Clover-on-TPU: carbon-aware ML inference serving (paper reproduction) +
+the multi-pod JAX serving/training framework it runs on.  See DESIGN.md."""
+__version__ = "1.0.0"

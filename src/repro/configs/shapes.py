@@ -1,0 +1,83 @@
+"""Assigned input-shape cells and ShapeDtypeStruct stand-ins for the dry-run.
+
+Each LM-family architecture is paired with four cells:
+  train_4k     seq=4096,   global_batch=256   -> train_step
+  prefill_32k  seq=32768,  global_batch=32    -> serve prefill (full forward)
+  decode_32k   seq=32768,  global_batch=128   -> serve_step (1 token + KV cache)
+  long_500k    seq=524288, global_batch=1     -> serve_step, sub-quadratic archs only
+
+``input_specs`` allocates nothing — everything is jax.ShapeDtypeStruct.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+# archs that can run 500k-context decode (sub-quadratic / bounded-window);
+# pure full-attention archs skip this cell (see DESIGN.md §Arch-applicability).
+LONG_CONTEXT_ARCHS = ("mamba2-2.7b", "zamba2-2.7b", "gemma3-27b")
+
+
+def cell_applicable(cfg: ModelConfig, shape: str) -> bool:
+    if shape == "long_500k":
+        return cfg.name in LONG_CONTEXT_ARCHS
+    return True
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for the model-facing batch of one cell.
+
+    For ``train``: tokens + labels.  For ``prefill``: tokens.  For ``decode``:
+    a single token column (the KV-cache spec comes from ``cache_specs_for``).
+    Modality frontends are stubs: seamless gets precomputed frame embeddings,
+    qwen2-vl gets M-RoPE position streams (patch embeds are exercised in the
+    smoke tests, not the dry run, where the backbone is the assignment).
+    """
+    cell = SHAPES[shape]
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "decode":
+        batch = {"tokens": sds((b, 1), jnp.int32)}
+        if cfg.mrope_sections:
+            batch["mrope_positions"] = sds((3, b, 1), jnp.int32)
+        return batch
+    batch = {"tokens": sds((b, s), jnp.int32)}
+    if cell.kind == "train":
+        batch["labels"] = sds((b, s), jnp.int32)
+    if cfg.mrope_sections:
+        batch["mrope_positions"] = sds((3, b, s), jnp.int32)
+    if cfg.n_enc_layers > 0:
+        batch["src_embeds"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def src_embeds_spec(cfg: ModelConfig, shape: str) -> Optional[jax.ShapeDtypeStruct]:
+    """Encoder-input spec for enc-dec decode cells (encoder memory length = seq)."""
+    if cfg.n_enc_layers == 0:
+        return None
+    cell = SHAPES[shape]
+    return sds((cell.global_batch, cell.seq_len, cfg.d_model), jnp.bfloat16)

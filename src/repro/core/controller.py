@@ -1,0 +1,99 @@
+"""Clover master controller (paper §4.3 + Fig. 5): monitors grid carbon
+intensity, re-invokes the optimizer on configurable triggers, and tracks the
+serving configuration over a trace.
+
+Re-invocation triggers (paper §4.2): carbon-intensity change beyond a
+threshold (default 5 %), accuracy-threshold violation, SLA-limit change, or a
+λ-parameter change.  The controller is driven by the simulator (or by the
+real-execution engine) through ``maybe_reoptimize``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.core import annealing as SA
+from repro.core import config_graph as CG
+from repro.core import schemes as SCH
+
+
+@dataclasses.dataclass
+class Invocation:
+    t_s: float
+    ci: float
+    outcome: Optional[SA.SAOutcome]
+    config: CG.ConfigGraph
+
+
+@dataclasses.dataclass
+class Controller:
+    scheme: SCH.Scheme
+    ctx: SCH.SchemeContext
+    ci_threshold: float = 0.05          # 5 % change re-invokes (paper §5.2.2)
+    config: Optional[CG.ConfigGraph] = None
+    last_opt_ci: Optional[float] = None
+    invocations: List[Invocation] = dataclasses.field(default_factory=list)
+
+    def start(self, t: float, ci: float) -> CG.ConfigGraph:
+        self.config = self.scheme.initial(self.ctx)
+        if self.scheme.carbon_aware:
+            self.config, outcome = self.scheme.reoptimize(self.ctx, ci, self.config)
+            self.invocations.append(Invocation(t, ci, outcome, self.config))
+            self.last_opt_ci = ci
+        return self.config
+
+    def should_reoptimize(self, ci: float) -> bool:
+        if not self.scheme.carbon_aware:
+            return False
+        if self.last_opt_ci is None:
+            return True
+        return abs(ci - self.last_opt_ci) / max(self.last_opt_ci, 1e-9) > self.ci_threshold
+
+    def maybe_reoptimize(self, t: float, ci: float
+                         ) -> Tuple[CG.ConfigGraph, Optional[SA.SAOutcome]]:
+        """Returns (active config, SA outcome if an invocation ran)."""
+        if not self.should_reoptimize(ci):
+            return self.config, None
+        new_cfg, outcome = self.scheme.reoptimize(self.ctx, ci, self.config)
+        self.config = new_cfg
+        self.last_opt_ci = ci
+        self.invocations.append(Invocation(t, ci, outcome, new_cfg))
+        return new_cfg, outcome
+
+    # --- elastic scaling (graph additivity, paper §4.2) -------------------------
+    def scale_blocks(self, delta_blocks: int, template: Optional[CG.ConfigGraph] = None):
+        """Add/remove serving blocks by edge-weight arithmetic.
+
+        Removal greedily subtracts instances summing to exactly 16 chips per
+        lost block (an exact cover always exists: slice sizes divide the block
+        and the graph is block-packable by construction) — modelling the
+        instances a failed block actually hosted.  Addition brings the new
+        block up with the highest-quality variant unpartitioned (``template``
+        overrides); the caller re-optimizes right after, exactly as the
+        controller does on any capacity event."""
+        assert self.config is not None
+        from repro.core import slices as SL
+        g = self.config
+        if delta_blocks < 0:
+            for _ in range(-delta_blocks):
+                remaining = SL.BLOCK_CHIPS
+                w = g.weights()
+                while remaining > 0:
+                    # largest instance that still fits the remaining quota
+                    cands = [(chips, e) for e, c in w.items()
+                             for chips in [e[1]] if c > 0 and chips <= remaining]
+                    assert cands, "graph not block-packable"
+                    chips, e = max(cands)
+                    w[e] -= 1
+                    remaining -= chips
+                g = CG.ConfigGraph.from_dict(g.family, w)
+        elif delta_blocks > 0:
+            if template is None:
+                best = max(self.ctx.variants, key=lambda v: v.quality)
+                template = CG.ConfigGraph.uniform(g.family, best.name,
+                                                  SL.BLOCK_CHIPS, 1)
+            for _ in range(delta_blocks):
+                g = g.add(template)
+        self.ctx.n_blocks += delta_blocks
+        self.config = g
+        return g

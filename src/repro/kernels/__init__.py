@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (pl.pallas_call + BlockSpec VMEM tiling) for the
+compute hot spots, each with a jit'd wrapper (ops.py) and a pure-jnp oracle
+(ref.py) asserted allclose across shape/dtype sweeps in tests/test_kernels.py:
+
+  flash_attention   — prefill attention, online softmax over KV blocks
+  decode_attention  — flash-decode: one token vs a long cache, SMEM length
+  ssd_scan          — Mamba2 SSD: chunk-dual matmuls + carried VMEM state
+"""

@@ -1,0 +1,46 @@
+"""jit'd public wrappers for the Pallas kernels, with backend dispatch:
+TPU → compiled Pallas; everything else → interpret mode (bit-accurate kernel
+semantics, executed in Python; used for CI validation on CPU) or the pure-jnp
+reference (fast CPU path for the models)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+from repro.kernels import ssd_scan as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "use_kernel"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    use_kernel: bool = True):
+    if not use_kernel:
+        return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def decode_attention(q, k_cache, v_cache, length, *, use_kernel: bool = True):
+    if not use_kernel:
+        return _ref.decode_attention_ref(q, k_cache, v_cache, length)
+    return _dec.decode_attention(q, k_cache, v_cache, length,
+                                 interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_kernel"))
+def ssd_chunked(x, dt, A, B, C, *, chunk: int = 128, use_kernel: bool = True
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if not use_kernel:
+        return _ref.ssd_ref(x, dt, A, B, C, chunk)
+    return _ssd.ssd_chunked(x, dt, A, B, C, chunk=chunk,
+                            interpret=not _on_tpu())

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are also the implementations the models use on non-TPU backends, so
+kernel == ref is both a correctness gate and a backend-parity guarantee.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True,
+                        window: int = 0) -> jnp.ndarray:
+    """Exact softmax attention.  q: (b, sq, H, dh); k, v: (b, skv, K, dh);
+    GQA by head grouping; window > 0 = sliding window.  f32 softmax."""
+    b, sq, H, dh = q.shape
+    skv, K = k.shape[1], k.shape[2]
+    g = H // K
+    qg = q.reshape(b, sq, K, g, dh)
+    s = jnp.einsum("bqkgd,bnkd->bkgqn", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * dh ** -0.5
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqn,bnkd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, H, dh).astype(q.dtype)
+
+
+def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         v_cache: jnp.ndarray, length) -> jnp.ndarray:
+    """One-position attention over a KV cache.  q: (b, H, dh);
+    caches: (b, S, K, dh); length: () valid prefix."""
+    b, H, dh = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    g = H // K
+    qg = q.reshape(b, K, g, dh)
+    s = jnp.einsum("bkgd,bnkd->bkgn", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * dh ** -0.5
+    mask = jnp.arange(S)[None, :] < length
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgn,bnkd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, H, dh).astype(q.dtype)
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
+            C: jnp.ndarray, chunk: int,
+            init_state: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD oracle — delegates to the model-layer reference (one
+    source of truth; see repro.models.ssm.ssd_ref)."""
+    from repro.models.ssm import ssd_ref as _impl
+    return _impl(x, dt, A, B, C, chunk, init_state)

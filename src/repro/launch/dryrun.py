@@ -1,0 +1,141 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first lines, before any jax import: jax locks the device count
+#   on first backend init.  512 host devices stand in for 2 pods x 256 chips.
+
+# Multi-pod dry-run: lower + compile every (architecture × input-shape × mesh)
+# cell on the production meshes, extract memory / FLOP / collective statistics,
+# and emit the roofline table inputs.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun                      # all cells
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape decode_32k
+#   PYTHONPATH=src python -m repro.launch.dryrun --multi-pod-only --out out.json
+
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_config, get_optimized_config
+from repro.configs import shapes as SH
+from repro.launch import hlo_analysis as HA
+from repro.launch import mesh as MESH
+from repro.launch import steps
+
+
+# =============================================================================
+# one cell
+# =============================================================================
+def run_cell(arch: str, shape: str, multi_pod: bool, *,
+             seq_shard: Optional[bool] = None, verbose: bool = True,
+             optimized: bool = False) -> Dict:
+    cfg = get_optimized_config(arch) if optimized else get_config(arch)
+    if not SH.cell_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape, "skipped": True,
+                "reason": "full-attention arch skips long_500k (DESIGN.md)"}
+    mesh = MESH.make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    t0 = time.time()
+    with mesh:
+        kw = {}
+        if SH.SHAPES[shape].kind == "decode" and seq_shard is not None:
+            kw["seq_shard"] = seq_shard
+        jitted, sds = steps.build_step_for_cell(cfg, mesh, shape, **kw)
+        lowered = jitted.lower(*sds)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        ca = compiled.cost_analysis() or {}
+        ma = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        stats = HA.analyze(hlo, n_dev)
+
+    res = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        # loop-aware (trip-count-scaled) stats — the roofline inputs:
+        "dot_flops_per_device": stats.dot_flops,
+        "collectives": stats.as_dict(),
+        # raw XLA cost analysis (loop bodies counted once — reference only):
+        "xla_flops_per_device_raw": float(ca.get("flops", 0.0)),
+        "xla_bytes_accessed_raw": float(ca.get("bytes accessed", 0.0)),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_per_device_bytes": ma.argument_size_in_bytes
+                                     + ma.output_size_in_bytes
+                                     + ma.temp_size_in_bytes
+                                     - ma.alias_size_in_bytes,
+        },
+    }
+    if verbose:
+        mem_gb = res["memory"]["peak_per_device_bytes"] / 2**30
+        print(f"[dryrun] {arch:24s} {shape:12s} {res['mesh']:8s} "
+              f"dotflops/dev={stats.dot_flops:.3e} "
+              f"mem/dev={mem_gb:6.2f}GiB "
+              f"coll={stats.total_coll_bytes/2**20:9.1f}MiB "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)",
+              flush=True)
+    return res
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCHS + [None])
+    ap.add_argument("--shape", default=None, choices=list(SH.SHAPES) + [None])
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--seq-shard", default=None,
+                    choices=[None, "on", "off"],
+                    help="override KV sequence sharding for decode cells")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the §Perf optimized per-arch overrides")
+    ap.add_argument("--out", default="dryrun_results.json")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else ARCHS
+    shape_names = [args.shape] if args.shape else list(SH.SHAPES)
+    meshes = [False, True]
+    if args.single_pod_only:
+        meshes = [False]
+    if args.multi_pod_only:
+        meshes = [True]
+    seq_shard = None if args.seq_shard is None else (args.seq_shard == "on")
+
+    results, failures = [], []
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shape_names:
+                try:
+                    results.append(run_cell(arch, shape, multi_pod,
+                                            seq_shard=seq_shard,
+                                            optimized=args.optimized))
+                except Exception as e:  # a failure here is a bug in the system
+                    failures.append((arch, shape, multi_pod, repr(e)))
+                    print(f"[dryrun] FAIL {arch} {shape} multi_pod={multi_pod}: {e}",
+                          flush=True)
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    n_run = sum(1 for r in results if not r.get("skipped"))
+    n_skip = sum(1 for r in results if r.get("skipped"))
+    print(f"[dryrun] wrote {args.out}: {n_run} compiled, {n_skip} skipped, "
+          f"{len(failures)} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

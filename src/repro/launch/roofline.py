@@ -1,0 +1,123 @@
+"""Three-term roofline analysis over dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+  compute    = dot_FLOPs/dev ÷ 197 TF/s          (bf16 MXU peak, v5e)
+  memory     = HBM traffic/dev ÷ 819 GB/s
+  collective = wire bytes/dev ÷ 50 GB/s           (per-link ICI)
+
+dot_FLOPs and wire bytes come from the loop-aware HLO analysis (exact, trip-
+count-scaled).  HBM traffic is a documented estimate built from the compiled
+memory footprint, because XLA's bytes-accessed also suffers the loop-body
+undercount:
+  train    : 3×args + 2×temps   (fwd + remat-fwd + bwd weight reads; live
+                                  activation write+read; opt read-modify-write)
+  prefill  : 1×args + 2×temps
+  decode   : 1×args + 1×temps   (weights + KV cache are the arguments and are
+                                  each streamed once — the exact decode bound)
+
+MODEL_FLOPS: 6·N_active·tokens (train), 2·N_active·tokens (prefill),
+2·N_active·batch + attention·KV (decode); the ratio to compiled dot-FLOPs
+surfaces remat/redundancy waste (a ratio ≪ 1 means the compiled graph does
+that much more work than the math requires).
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+from repro.configs import get_config
+from repro.configs import shapes as SH
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_TRAFFIC_COEF = {"train": (3.0, 2.0), "prefill": (1.0, 2.0), "decode": (1.0, 1.0)}
+
+
+def model_flops_per_device(arch: str, shape: str, devices: int) -> float:
+    cfg = get_config(arch)
+    cell = SH.SHAPES[shape]
+    n_act = cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        total = 6.0 * n_act * tokens
+    elif cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        total = 2.0 * n_act * tokens + cfg.flops_per_token(cell.seq_len) * tokens \
+            - 2.0 * n_act * tokens  # flops_per_token already includes 2·N
+        total = cfg.flops_per_token(cell.seq_len) * tokens
+    else:
+        total = cfg.flops_per_token(cell.seq_len, decode=True) * cell.global_batch
+    return total / devices
+
+
+def roofline_row(rec: Dict) -> Optional[Dict]:
+    if rec.get("skipped"):
+        return None
+    kind = SH.SHAPES[rec["shape"]].kind
+    ka, kt = _TRAFFIC_COEF[kind]
+    mem = rec["memory"]
+    traffic = ka * mem["argument_bytes"] + kt * mem["temp_bytes"]
+
+    t_compute = rec["dot_flops_per_device"] / PEAK_FLOPS
+    t_memory = traffic / HBM_BW
+    t_coll = rec["collectives"]["total_collective_bytes"] / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec["shape"], rec["devices"])
+    bound = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_per_device": mf,
+        "useful_flops_ratio": mf / max(rec["dot_flops_per_device"], 1.0),
+        "step_time_bound_s": bound,
+        "roofline_fraction": (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0,
+        "mem_footprint_gib": mem["peak_per_device_bytes"] / 2**30,
+        "fits_hbm": mem["peak_per_device_bytes"] <= 16 * 2**30,
+    }
+
+
+def analyze_file(path: str, mesh: str = "16x16") -> List[Dict]:
+    rows = []
+    for rec in json.load(open(path)):
+        if rec.get("skipped") or rec.get("mesh") != mesh:
+            continue
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO flops | roofline frac | mem GiB | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} "
+            f"| {r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} "
+            f"| **{r['dominant']}** | {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} | {r['mem_footprint_gib']:.1f} "
+            f"| {'✓' if r['fits_hbm'] else '✗'} |\n")
+    return "".join(out)
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="dryrun_results.json")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+    rows = analyze_file(args.inp, args.mesh)
+    print(to_markdown(rows))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

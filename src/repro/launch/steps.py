@@ -1,0 +1,159 @@
+"""Builders that assemble (step_fn, abstract inputs, shardings) triples for
+train / prefill / decode, shared by the dry-run, the drivers and tests.
+
+Everything here is allocation-free: abstract params come from
+``jax.eval_shape`` over the initializers, inputs are ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import shapes as SH
+from repro.models import registry as R
+from repro.models.config import ModelConfig
+from repro.sharding import rules
+from repro.train import optimizer as O
+from repro.train import train_loop as TL
+
+
+def abstract_params(cfg: ModelConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(functools.partial(R.init_params, cfg=cfg), key)
+
+
+def named(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# =============================================================================
+# train
+# =============================================================================
+def default_accum(cfg: ModelConfig, mesh, shape: str) -> int:
+    """Microbatch count: target ≤4 sequences per device per microbatch."""
+    cell = SH.SHAPES[shape]
+    dp = rules.axes_size(mesh, rules.data_axes(mesh))
+    b_local = max(cell.global_batch // dp, 1)
+    accum = max(b_local // 4, 1)
+    while cell.global_batch % (accum * dp) and accum > 1:
+        accum //= 2
+    return accum
+
+
+def build_train(cfg: ModelConfig, mesh, shape: str = "train_4k",
+                opt_cfg: Optional[O.AdamWConfig] = None,
+                accum: Optional[int] = None,
+                zero1: bool = True):
+    """Returns (step_fn_jitted, (state_sds, batch_sds)).
+
+    ``accum``: gradient-accumulation microbatches (None = auto: ≤4 seqs per
+    device per microbatch).  ``zero1``: shard AdamW m/v over the data axes."""
+    opt_cfg = opt_cfg or O.AdamWConfig()
+    params_sds = abstract_params(cfg)
+    opt_sds = jax.eval_shape(O.init_opt_state, params_sds)
+    state_sds = {"params": params_sds, "opt": opt_sds}
+
+    p_specs = rules.param_specs(params_sds, cfg, mesh)
+    mv_specs = (rules.opt_state_specs(params_sds, cfg, mesh) if zero1 else p_specs)
+    state_specs = {
+        "params": p_specs,
+        "opt": {"m": mv_specs, "v": mv_specs, "step": P()},
+    }
+    batch_sds = SH.input_specs(cfg, shape)
+    batch_specs = rules.batch_specs(batch_sds, mesh)
+
+    if accum is None:
+        accum = default_accum(cfg, mesh, shape)
+    if accum > 1:
+        step = TL.make_grad_accum_train_step(cfg, opt_cfg, accum,
+                                             batch_axes=rules.data_axes(mesh))
+    else:
+        step = TL.make_train_step(cfg, opt_cfg)
+    metric_specs = {"loss": P(), "aux_loss": P(), "ppl_proxy": P(),
+                    "grad_norm": P(), "lr": P()}
+    jitted = jax.jit(
+        step,
+        in_shardings=(named(state_specs, mesh), named(batch_specs, mesh)),
+        out_shardings=(named(state_specs, mesh), named(metric_specs, mesh)),
+        donate_argnums=(0,),
+    )
+    return jitted, (state_sds, batch_sds)
+
+
+# =============================================================================
+# serve: prefill
+# =============================================================================
+def build_prefill(cfg: ModelConfig, mesh, shape: str = "prefill_32k"):
+    params_sds = abstract_params(cfg)
+    p_specs = rules.param_specs(params_sds, cfg, mesh)
+    batch_sds = SH.input_specs(cfg, shape)
+    batch_specs = rules.batch_specs(batch_sds, mesh)
+
+    def prefill(params, batch):
+        logits, _ = R.forward(params, batch, cfg, train=False)
+        return logits
+
+    cell = SH.SHAPES[shape]
+    batch_axes = rules.fit_axes(mesh, rules.data_axes(mesh), cell.global_batch)
+    out_spec = P(batch_axes, None, rules.MODEL_AXIS)
+    jitted = jax.jit(
+        prefill,
+        in_shardings=(named(p_specs, mesh), named(batch_specs, mesh)),
+        out_shardings=NamedSharding(mesh, out_spec),
+    )
+    return jitted, (params_sds, batch_sds)
+
+
+# =============================================================================
+# serve: decode
+# =============================================================================
+def build_decode(cfg: ModelConfig, mesh, shape: str = "decode_32k",
+                 seq_shard: Optional[bool] = None):
+    """serve_step: one new token against a seq_len KV cache.
+
+    ``seq_shard`` — shard the KV sequence dim over (data, model) instead of
+    batch/heads; defaults on for the 500k cell (batch too small to shard).
+    """
+    cell = SH.SHAPES[shape]
+    if seq_shard is None:
+        seq_shard = cell.global_batch < 8
+    params_sds = abstract_params(cfg)
+    p_specs = rules.param_specs(params_sds, cfg, mesh)
+
+    batch_sds = SH.input_specs(cfg, shape)
+    batch_specs = rules.batch_specs(batch_sds, mesh)
+
+    src_sds = SH.src_embeds_spec(cfg, shape)
+    cache_sds = jax.eval_shape(
+        functools.partial(R.make_cache, cfg=cfg, batch_size=cell.global_batch,
+                          max_len=cell.seq_len),
+        params_sds, src_embeds=src_sds)
+    cache_specs = rules.cache_specs(cache_sds, mesh, cfg, seq_shard=seq_shard)
+
+    def serve_step(params, cache, batch):
+        return R.decode_step(params, cache, batch, cfg)
+
+    batch_axes = rules.fit_axes(mesh, rules.data_axes(mesh), cell.global_batch)
+    logits_out = NamedSharding(mesh, P(batch_axes, rules.MODEL_AXIS))
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(named(p_specs, mesh), named(cache_specs, mesh),
+                      named(batch_specs, mesh)),
+        out_shardings=(logits_out, named(cache_specs, mesh)),
+        donate_argnums=(1,),
+    )
+    return jitted, (params_sds, cache_sds, batch_sds)
+
+
+def build_step_for_cell(cfg: ModelConfig, mesh, shape: str, **kw):
+    kind = SH.SHAPES[shape].kind
+    if kind == "train":
+        return build_train(cfg, mesh, shape, **kw)
+    if kind == "prefill":
+        return build_prefill(cfg, mesh, shape, **kw)
+    return build_decode(cfg, mesh, shape, **kw)

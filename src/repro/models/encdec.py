@@ -1,0 +1,176 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2 assignment).
+
+The modality frontend is a stub per the assignment spec: ``src_embeds`` are
+precomputed audio frame embeddings (b, s_src, d).  The encoder is a
+bidirectional transformer; the decoder adds causal self-attention plus
+cross-attention whose K/V are precomputed once per request (prefill) and
+reused across decode steps.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Params = dict
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    """Per-layer activation checkpointing.  "full" = nothing saveable (layer
+    inputs only — memory-lean default), "dots" = save matmul outputs (less
+    recompute, more HBM — a §Perf knob), "none" = no remat."""
+    if not cfg.remat or cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def init_encoder_layer(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.init_rmsnorm(None, cfg.d_model, cfg.dtype),
+        "attn": L.init_attention(ks[0], cfg),
+        "ln2": L.init_rmsnorm(None, cfg.d_model, cfg.dtype),
+        "mlp": L.init_mlp(ks[1], cfg),
+    }
+
+
+def init_decoder_layer(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_rmsnorm(None, cfg.d_model, cfg.dtype),
+        "attn": L.init_attention(ks[0], cfg),
+        "lnx": L.init_rmsnorm(None, cfg.d_model, cfg.dtype),
+        "xattn": L.init_attention(ks[1], cfg),
+        "ln2": L.init_rmsnorm(None, cfg.d_model, cfg.dtype),
+        "mlp": L.init_mlp(ks[2], cfg),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig) -> Params:
+    k_emb, k_enc, k_dec, k_head = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k_enc, cfg.n_enc_layers)
+    dec_keys = jax.random.split(k_dec, cfg.n_layers)
+    params = {
+        "embed": L.init_embedding(k_emb, cfg.padded_vocab, cfg.d_model, cfg.dtype),
+        "enc_layers": jax.vmap(lambda k: init_encoder_layer(k, cfg))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: init_decoder_layer(k, cfg))(dec_keys),
+        "enc_norm": L.init_rmsnorm(None, cfg.d_model, cfg.dtype),
+        "final_norm": L.init_rmsnorm(None, cfg.d_model, cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_dense(k_head, cfg.d_model, cfg.padded_vocab, cfg.dtype)
+    return params
+
+
+def encode(params: Params, src_embeds: jnp.ndarray, cfg: ModelConfig,
+           train: bool = False) -> jnp.ndarray:
+    """src_embeds: (b, s_src, d) -> encoder memory (b, s_src, d)."""
+    x = src_embeds.astype(cfg.dtype)
+    s = x.shape[1]
+    cos, sin = L.rope_table(jnp.arange(s, dtype=jnp.int32),
+                            int(cfg.d_head * cfg.partial_rotary), cfg.rope_theta)
+
+    def body(x, p):
+        h = L.rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+        x = x + L.attention_apply(p["attn"], h, cfg, cos, sin, causal=False)
+        h = L.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+        return x + L.mlp_apply(p["mlp"], h, cfg), None
+
+    if train:
+        body = _maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.rmsnorm_apply(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward_encdec(params: Params, src_embeds: jnp.ndarray, tokens: jnp.ndarray,
+                   cfg: ModelConfig, train: bool = False,
+                   return_hidden: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Teacher-forced seq2seq forward -> (logits (b, s_tgt, V), aux=0)."""
+    memory = encode(params, src_embeds, cfg, train=train)
+    b, s = tokens.shape
+    x = L.embedding_apply(params["embed"], tokens)
+    cos, sin = L.rope_table(jnp.arange(s, dtype=jnp.int32),
+                            int(cfg.d_head * cfg.partial_rotary), cfg.rope_theta)
+
+    def body(x, p):
+        h = L.rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+        x = x + L.attention_apply(p["attn"], h, cfg, cos, sin, causal=True)
+        h = L.rmsnorm_apply(p["lnx"], x, cfg.norm_eps)
+        kv = L.cross_kv(p["xattn"], memory, cfg)
+        x = x + L.attention_apply(p["xattn"], h, cfg, None, None, kv=kv)
+        h = L.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+        return x + L.mlp_apply(p["mlp"], h, cfg), None
+
+    if train:
+        body = _maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return x, jnp.zeros((), jnp.float32)
+    if cfg.tie_embeddings:
+        logits = L.embedding_logits(params["embed"], x)
+    else:
+        logits = L.dense_apply(params["lm_head"], x)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+# =============================================================================
+# decode
+# =============================================================================
+def init_encdec_cache(params: Params, src_embeds: jnp.ndarray, cfg: ModelConfig,
+                      max_len: int, dtype=jnp.bfloat16) -> Params:
+    """Run the encoder once and precompute per-layer cross-attention K/V."""
+    memory = encode(params, src_embeds, cfg)
+    b = memory.shape[0]
+
+    def xkv(_, p):
+        k, v = L.cross_kv(p["xattn"], memory, cfg)
+        return None, (k.astype(dtype), v.astype(dtype))
+
+    _, (xk, xv) = jax.lax.scan(xkv, None, params["dec_layers"])
+    K, dh = cfg.n_kv_heads, cfg.d_head
+    return {
+        "xk": xk, "xv": xv,                                  # (L, b, s_src, K, dh)
+        "k": jnp.zeros((cfg.n_layers, b, max_len, K, dh), dtype),
+        "v": jnp.zeros((cfg.n_layers, b, max_len, K, dh), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step_encdec(params: Params, cache: Params, tokens: jnp.ndarray,
+                       cfg: ModelConfig) -> Tuple[jnp.ndarray, Params]:
+    """One decoder step with cached self-attn KV and fixed cross KV."""
+    pos = cache["pos"]
+    x = L.embedding_apply(params["embed"], tokens)
+    cos, sin = L.rope_table(pos[None].astype(jnp.int32),
+                            int(cfg.d_head * cfg.partial_rotary), cfg.rope_theta)
+
+    def body(x, xs):
+        p, kc, vc, xk, xv = xs
+        h = L.rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+        a, kc2, vc2 = L.attention_decode_apply(p["attn"], h, cfg, cos, sin, kc, vc, pos)
+        x = x + a
+        h = L.rmsnorm_apply(p["lnx"], x, cfg.norm_eps)
+        q, _, _ = L._project_qkv(p["xattn"], h, cfg, None, None)
+        o = L.decode_attention_ref(q, xk, xv, jnp.int32(xk.shape[1]))
+        b = x.shape[0]
+        x = x + L.dense_apply(p["xattn"]["wo"], o.reshape(b, 1, cfg.n_heads * cfg.d_head))
+        h = L.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+        return x + L.mlp_apply(p["mlp"], h, cfg), (kc2, vc2)
+
+    x, (k2, v2) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"], cache["xk"], cache["xv"]))
+    x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.embedding_logits(params["embed"], x)
+    else:
+        logits = L.dense_apply(params["lm_head"], x)
+    new_cache = dict(cache)
+    new_cache.update({"k": k2, "v": v2, "pos": pos + 1})
+    return logits[:, 0, :], new_cache

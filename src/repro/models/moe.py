@@ -1,0 +1,132 @@
+"""Mixture-of-Experts layer — group-wise GShard dense dispatch.
+
+TPU-native formulation: tokens are tiled into groups of ``moe_group_size`` so
+the one-hot dispatch/combine tensors stay bounded at
+``T × E × C_group`` (MaxText-style), which GSPMD shards as
+(group → data axis, expert → model axis) inserting the expected all-to-alls.
+
+Supports shared experts (qwen2-moe: 4 shared + 60 routed top-4) and a
+load-balance auxiliary loss (Switch-style).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+
+Params = dict
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    d, E, F = cfg.d_model, cfg.padded_experts, cfg.d_expert_ff
+    out_std = F ** -0.5 / (2 * cfg.n_layers) ** 0.5
+    p = {
+        "router": L.truncated_normal(ks[0], (d, E), jnp.float32, d ** -0.5),
+        "w_gate": L.truncated_normal(ks[1], (E, d, F), cfg.dtype, d ** -0.5),
+        "w_up": L.truncated_normal(ks[2], (E, d, F), cfg.dtype, d ** -0.5),
+        "w_down": L.truncated_normal(ks[3], (E, F, d), cfg.dtype, out_std),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.init_mlp(ks[4], cfg, d_ff=cfg.n_shared_experts * F)
+    return p
+
+
+def _capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    c = int(tokens_per_group * cfg.top_k / cfg.padded_experts * cfg.capacity_factor)
+    return max(c, 1)
+
+
+def moe_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (b, s, d) -> (y, aux_loss).
+
+    Routing: softmax over experts, top-k per token, renormalized gates;
+    capacity-truncated dense dispatch within each token group.
+    """
+    b, s, d = x.shape
+    T = b * s
+    E, k = cfg.padded_experts, cfg.top_k
+    gsz = min(cfg.moe_group_size, T)
+    while T % gsz:
+        gsz //= 2
+    G = T // gsz
+    C = _capacity(gsz, cfg)
+    if s == 1:
+        # decode: generous capacity headroom (decode_capacity_factor ≈ 4×
+        # the mean load, clamped to the group size so tiny groups are exactly
+        # drop-free).  C = gsz would be adversarially drop-free but scales the
+        # dense-dispatch einsums ~10× (measured — EXPERIMENTS.md §Perf C2).
+        c_head = int(gsz * cfg.top_k / cfg.padded_experts
+                     * cfg.decode_capacity_factor)
+        C = min(gsz, max(c_head, cfg.top_k, 1))
+
+    xg = x.reshape(G, gsz, d)
+    logits = (xg.astype(jnp.float32) @ p["router"])            # (G, t, E)
+    if E > cfg.n_experts:      # router-mask the EP padding experts
+        pad_mask = jnp.arange(E) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)              # (G, t, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # --- load-balance aux loss (Switch eq.4) --------------------------------
+    me = jnp.mean(probs, axis=(0, 1))                          # mean prob per expert
+    top1 = jax.nn.one_hot(gate_idx[..., 0], E)
+    ce = jnp.mean(top1, axis=(0, 1))                           # fraction routed
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    # --- capacity-based positions -------------------------------------------
+    # expert_mask: (G, t, k, E) one-hot of chosen experts
+    expert_mask = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)
+    # position of each (token, slot) within its expert queue, ordered by token
+    flat = expert_mask.reshape(G, gsz * k, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) * flat - 1        # (G, t*k, E)
+    pos_in_expert = pos_in_expert.reshape(G, gsz, k, E)
+    keep = (pos_in_expert < C) & (expert_mask > 0)
+
+    # dispatch: (G, t, E, C) one-hot over capacity slot
+    pos_clip = jnp.clip(pos_in_expert, 0, C - 1)
+    disp = (jax.nn.one_hot(pos_clip, C, dtype=x.dtype)
+            * keep[..., None].astype(x.dtype) * expert_mask[..., None].astype(x.dtype))
+    dispatch = jnp.sum(disp, axis=2)                           # (G, t, E, C)
+    combine = jnp.sum(disp * gate_vals[..., None, None].astype(x.dtype), axis=2)
+
+    # --- expert compute ------------------------------------------------------
+    xin = jnp.einsum("gtec,gtd->gecd", dispatch, xg)           # (G, E, C, d)
+    h = jnp.einsum("gecd,edf->gecf", xin, p["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", xin, p["w_up"])
+    h = jax.nn.silu(h) * u
+    out = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    y = jnp.einsum("gtec,gecd->gtd", combine, out).reshape(b, s, d)
+
+    if "shared" in p:
+        y = y + L.mlp_apply(p["shared"], x, cfg)
+    return y, aux
+
+
+def moe_apply_dense_ref(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Oracle: run *every* expert densely, weight by renormalized top-k gates.
+    Equals moe_apply when capacity is unbounded (no token drops)."""
+    b, s, d = x.shape
+    E = cfg.padded_experts
+    logits = x.astype(jnp.float32) @ p["router"]
+    if E > cfg.n_experts:
+        logits = jnp.where(jnp.arange(E)[None, None, :] >= cfg.n_experts,
+                           -1e30, logits)
+    probs = jax.nn.softmax(logits, -1)
+    gv, gi = jax.lax.top_k(probs, cfg.top_k)
+    gv = gv / jnp.sum(gv, -1, keepdims=True)
+    gates = jnp.zeros_like(probs).at[
+        jnp.arange(b)[:, None, None], jnp.arange(s)[None, :, None], gi
+    ].set(gv)                                                   # (b, s, E)
+    h = jnp.einsum("bsd,edf->bsef", x, p["w_gate"])
+    u = jnp.einsum("bsd,edf->bsef", x, p["w_up"])
+    out = jnp.einsum("bsef,efd->bsed", jax.nn.silu(h) * u, p["w_down"])
+    y = jnp.einsum("bse,bsed->bsd", gates.astype(x.dtype), out)
+    if "shared" in p:
+        y = y + L.mlp_apply(p["shared"], x, cfg)
+    return y

@@ -1,0 +1,63 @@
+"""Uniform model interface over all architecture families.
+
+Batch conventions (all jnp arrays / ShapeDtypeStructs):
+  lm / moe / ssm / hybrid : {"tokens": (b, s) i32}            (+ "labels" for train)
+  vlm                     : + {"mrope_positions": (3, b, s) i32}
+  encdec / audio          : {"src_embeds": (b, s_src, d) bf16, "tokens": (b, s) i32}
+
+Decode batches carry a single token column: {"tokens": (b, 1)}.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.models import encdec as ED
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+Params = dict
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    if cfg.n_enc_layers > 0:
+        return ED.init_encdec(key, cfg)
+    return T.init_lm(key, cfg)
+
+
+def forward(params: Params, batch: dict, cfg: ModelConfig,
+            train: bool = False, return_hidden: bool = False
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward -> (logits (b, s, V), aux_loss ())."""
+    if cfg.n_enc_layers > 0:
+        return ED.forward_encdec(params, batch["src_embeds"], batch["tokens"], cfg,
+                                 train=train, return_hidden=return_hidden)
+    return T.forward_lm(params, batch["tokens"], cfg,
+                        mrope_positions=batch.get("mrope_positions"),
+                        train=train, return_hidden=return_hidden)
+
+
+def head_weights(params: Params, cfg: ModelConfig) -> jnp.ndarray:
+    """LM-head matrix (d, V) — the tied path reuses the embedding table."""
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["lm_head"]["w"]
+
+
+def make_cache(params: Params, cfg: ModelConfig, batch_size: int, max_len: int,
+               src_embeds: Optional[jnp.ndarray] = None,
+               dtype=jnp.bfloat16) -> Params:
+    if cfg.n_enc_layers > 0:
+        assert src_embeds is not None, "enc-dec decode needs encoder inputs"
+        return ED.init_encdec_cache(params, src_embeds, cfg, max_len, dtype)
+    return T.init_kv_cache(cfg, batch_size, max_len, dtype)
+
+
+def decode_step(params: Params, cache: Params, batch: dict,
+                cfg: ModelConfig) -> Tuple[jnp.ndarray, Params]:
+    """One-token decode -> (logits (b, V), new_cache)."""
+    if cfg.n_enc_layers > 0:
+        return ED.decode_step_encdec(params, cache, batch["tokens"], cfg)
+    return T.decode_step_lm(params, cache, batch["tokens"], cfg,
+                            mrope_positions=batch.get("mrope_positions"))

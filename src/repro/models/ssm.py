@@ -1,0 +1,251 @@
+"""Mamba2 (state-space duality) block — chunked SSD in pure JAX.
+
+Follows the minimal SSD formulation of arXiv:2405.21060 §6: the sequence is
+tiled into chunks; within-chunk terms use the quadratic (attention-dual) form,
+across-chunk terms use the linear recurrence over chunk states.  The
+within-chunk contraction is the compute hot-spot and has a Pallas kernel
+(`repro.kernels.ssd_scan`) validated against `ssd_ref` here.
+
+TPU sharding note: the canonical fused ``in_proj`` is split into separate
+z / x / B / C / dt projections so the SSM head dimension shards cleanly on the
+``model`` mesh axis (heads × head_dim are contiguous per projection), instead
+of GSPMD halo-exchanging across a fused output that mixes shard-unaligned
+channel groups.
+
+Decode is the exact O(1) recurrence: h ← h·exp(Δ·A) + Δ·B·x, y = C·h + D·x,
+plus a rolling depthwise-conv buffer.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+
+Params = dict
+
+
+# =============================================================================
+# init
+# =============================================================================
+def init_mamba2(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    d, di = cfg.d_model, cfg.d_inner
+    G, N, H, k = cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_conv
+    out_std = di ** -0.5 / (2 * cfg.n_layers) ** 0.5
+    return {
+        "wz": L.init_dense(ks[0], d, di, cfg.dtype),
+        "wx": L.init_dense(ks[1], d, di, cfg.dtype),
+        "wB": L.init_dense(ks[2], d, G * N, cfg.dtype),
+        "wC": L.init_dense(ks[3], d, G * N, cfg.dtype),
+        "wdt": L.init_dense(ks[4], d, H, cfg.dtype),
+        "conv_x": L.truncated_normal(ks[5], (k, di), cfg.dtype, k ** -0.5),
+        "conv_B": L.truncated_normal(ks[6], (k, G * N), cfg.dtype, k ** -0.5),
+        "conv_C": L.truncated_normal(ks[7], (k, G * N), cfg.dtype, k ** -0.5),
+        "conv_bx": jnp.zeros((di,), cfg.dtype),
+        "conv_bB": jnp.zeros((G * N,), cfg.dtype),
+        "conv_bC": jnp.zeros((G * N,), cfg.dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gate_norm": L.init_rmsnorm(None, di, cfg.dtype),
+        "out_proj": L.init_dense(ks[4], di, d, cfg.dtype, stddev=out_std),
+    }
+
+
+# =============================================================================
+# chunked SSD reference (pure jnp oracle; also the training path)
+# =============================================================================
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., T) -> (..., T, T) with out[i, j] = sum(x[j+1..i]); -inf for j > i."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool), k=0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
+            C: jnp.ndarray, chunk: int,
+            init_state: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked state-space-duality scan.
+
+    x:  (b, s, H, P)   head inputs
+    dt: (b, s, H)      positive step sizes (already softplus'd + biased)
+    A:  (H,)           negative decay rates
+    B:  (b, s, G, N); C: (b, s, G, N)  (G groups broadcast over heads)
+    Returns (y (b, s, H, P) f32, final_state (b, H, P, N) f32).
+    """
+    b, s, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    hpg = H // G
+
+    xf = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None])
+    dA = dt.astype(jnp.float32) * A[None, None, :]                    # (b, s, H)
+
+    xc = xf.reshape(b, nc, chunk, H, P)
+    Bc = B.astype(jnp.float32).reshape(b, nc, chunk, G, N)
+    Cc = C.astype(jnp.float32).reshape(b, nc, chunk, G, N)
+    dAc = dA.reshape(b, nc, chunk, H).transpose(0, 3, 1, 2)           # (b, H, nc, l)
+    dA_cs = jnp.cumsum(dAc, axis=-1)
+
+    # ---- 1. within-chunk (quadratic dual form) ------------------------------
+    Lmat = jnp.exp(_segsum(dAc))                                      # (b, H, nc, l, l)
+    scores = jnp.einsum("bclgn,bcsgn->bgcls", Cc, Bc)                 # (b, G, nc, l, l)
+    scores = jnp.repeat(scores, hpg, axis=1)                          # (b, H, nc, l, l)
+    Y_diag = jnp.einsum("bhcls,bcshp->bclhp", scores * Lmat, xc)
+
+    # ---- 2. per-chunk states -------------------------------------------------
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)                   # (b, H, nc, l)
+    Bh = jnp.repeat(Bc, hpg, axis=3)                                  # (b, nc, l, H, N)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", Bh, decay_states, xc)
+
+    # ---- 3. inter-chunk recurrence (scan over chunks) --------------------------
+    chunk_decay = jnp.exp(dA_cs[..., -1])                             # (b, H, nc)
+    if init_state is None:
+        init_state = jnp.zeros((b, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        st, dec = inp                                                  # (b,H,P,N), (b,H)
+        prev = h
+        h = h * dec[..., None, None] + st
+        return h, prev
+
+    final_state, prev_states = jax.lax.scan(
+        step, init_state.astype(jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)                # (b, nc, H, P, N)
+
+    # ---- 4. off-diagonal (state → output) ----------------------------------------
+    state_decay_out = jnp.exp(dA_cs)                                  # (b, H, nc, l)
+    Ch = jnp.repeat(Cc, hpg, axis=3)                                  # (b, nc, l, H, N)
+    Y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", Ch, prev_states, state_decay_out)
+
+    y = (Y_diag + Y_off).reshape(b, s, H, P)
+    return y, final_state
+
+
+# =============================================================================
+# projections + causal depthwise conv
+# =============================================================================
+def _conv_causal(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv.  x: (b, s, c); w: (k, c)."""
+    s = x.shape[1]
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + s, :] * w[i][None, None, :] for i in range(k))
+    return out + b
+
+
+def _project(p: Params, x: jnp.ndarray, cfg: ModelConfig):
+    z = L.dense_apply(p["wz"], x)
+    xs = L.dense_apply(p["wx"], x)
+    B = L.dense_apply(p["wB"], x)
+    C = L.dense_apply(p["wC"], x)
+    dt = L.dense_apply(p["wdt"], x)
+    return z, xs, B, C, dt
+
+
+def mamba2_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                 use_kernel: bool = False) -> jnp.ndarray:
+    """Full-sequence Mamba2 block.  x: (b, s, d) -> (b, s, d)."""
+    b, s, d = x.shape
+    di, G, N, H, P = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    z, xs, B, C, dt = _project(p, x, cfg)
+    xs = jax.nn.silu(_conv_causal(xs, p["conv_x"], p["conv_bx"]))
+    B = jax.nn.silu(_conv_causal(B, p["conv_B"], p["conv_bB"]))
+    C = jax.nn.silu(_conv_causal(C, p["conv_C"], p["conv_bC"]))
+
+    xs = xs.reshape(b, s, H, P)
+    B = B.reshape(b, s, G, N)
+    C = C.reshape(b, s, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+
+    if use_kernel:
+        from repro.kernels import ops as kops   # lazy import
+        y, _ = kops.ssd_chunked(xs, dt, A, B, C, chunk=cfg.ssm_chunk)
+    else:
+        y, _ = ssd_ref(xs, dt, A, B, C, chunk=cfg.ssm_chunk)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+
+    y = L.rmsnorm_apply(p["gate_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return L.dense_apply(p["out_proj"], y)
+
+
+# =============================================================================
+# decode (exact O(1) recurrence)
+# =============================================================================
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    di, G, N, k = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "conv_x": jnp.zeros((batch, k - 1, di), dtype),
+        "conv_B": jnp.zeros((batch, k - 1, G * N), dtype),
+        "conv_C": jnp.zeros((batch, k - 1, G * N), dtype),
+        "state": jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_head_dim, N), jnp.float32),
+    }
+
+
+def _conv_step(hist: jnp.ndarray, new: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """hist: (b, k-1, c); new: (b, c).  Returns (out (b, c), new_hist)."""
+    full = jnp.concatenate([hist, new[:, None, :].astype(hist.dtype)], axis=1)
+    out = jnp.einsum("bkc,kc->bc", full.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return out, full[:, 1:, :]
+
+
+def mamba2_decode_step(p: Params, x: jnp.ndarray, cache: dict, cfg: ModelConfig):
+    """x: (b, 1, d).  Returns (y (b, 1, d), new_cache)."""
+    b = x.shape[0]
+    di, G, N, H, P = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    z, xs, B, C, dt = _project(p, x[:, 0, :], cfg)
+
+    xs, conv_x = _conv_step(cache["conv_x"], xs, p["conv_x"], p["conv_bx"])
+    B, conv_B = _conv_step(cache["conv_B"], B, p["conv_B"], p["conv_bB"])
+    C, conv_C = _conv_step(cache["conv_C"], C, p["conv_C"], p["conv_bC"])
+    xs, B, C = jax.nn.silu(xs), jax.nn.silu(B), jax.nn.silu(C)
+
+    xs = xs.reshape(b, H, P)
+    B = B.reshape(b, G, N)
+    C = C.reshape(b, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])     # (b, H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])                                            # (b, H)
+
+    hpg = H // G
+    Bh = jnp.repeat(B, hpg, axis=1)                                          # (b, H, N)
+    Ch = jnp.repeat(C, hpg, axis=1)
+    state = cache["state"] * dA[..., None, None] + (
+        (dt[..., None] * xs)[..., None] * Bh[:, :, None, :])                 # (b,H,P,N)
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch) + xs * p["D"][None, :, None]
+    y = y.reshape(b, di).astype(x.dtype)
+    y = L.rmsnorm_apply(p["gate_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = L.dense_apply(p["out_proj"], y)[:, None, :]
+    return out, {"conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C, "state": state}
+
+
+def ssd_sequential_ref(x, dt, A, B, C, init_state=None):
+    """Token-by-token oracle for ssd_ref / the Pallas kernel (slow, exact)."""
+    b, s, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    hpg = H // G
+    state = jnp.zeros((b, H, P, N), jnp.float32) if init_state is None else init_state
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = jnp.repeat(B.astype(jnp.float32), hpg, axis=2)
+    Cf = jnp.repeat(C.astype(jnp.float32), hpg, axis=2)
+
+    def step(state, t):
+        dA = jnp.exp(dtf[:, t] * A[None, :])                                  # (b, H)
+        xt = xf[:, t] * dtf[:, t][..., None]                                  # (b, H, P)
+        state = state * dA[..., None, None] + xt[..., None] * Bf[:, t][:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", state, Cf[:, t])
+        return state, y
+
+    state, ys = jax.lax.scan(step, state, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3), state

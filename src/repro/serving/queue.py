@@ -1,0 +1,198 @@
+"""Per-request discrete-event serving queue (paper §4.3 load balancer).
+
+Producer/consumer FIFO exactly as the paper describes: requests enter a FIFO
+queue; whenever an instance finishes it notifies the consumer, which feeds it
+the head-of-line request.  Extensions for scale (DESIGN.md §5 fault
+tolerance):
+
+  * lognormal service-time jitter + a heavy straggler tail;
+  * hedged requests: if a request has been in service longer than
+    ``hedge_factor × p95`` of that instance's nominal latency, a duplicate is
+    dispatched to the next free instance and the first completion wins;
+  * fail/repair: instances fail (Poisson) and respawn after a repair time;
+    their in-flight request is re-queued at the head (no loss).
+
+Used by tests (validates the fluid simulator on short horizons), by
+benchmarks for short-span exact replays, and by the real-execution engine
+(which substitutes measured service times).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+import random
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import config_graph as CG
+from repro.core import perf_model as PM
+from repro.core.catalog import Variant
+
+
+@dataclasses.dataclass
+class DESConfig:
+    jitter_sigma: float = 0.08          # lognormal sigma on service times
+    straggler_prob: float = 0.0         # P[service time × straggler_mult]
+    straggler_mult: float = 8.0
+    hedge: bool = False
+    hedge_factor: float = 3.0
+    fail_rate_per_instance_hz: float = 0.0
+    repair_time_s: float = 30.0
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class DESResult:
+    latencies: List[float]
+    accuracy_weighted: float
+    served: int
+    energy_j: float
+    hedges: int
+    failures: int
+    requeues: int
+
+    def p95(self) -> float:
+        if not self.latencies:
+            return 0.0
+        s = sorted(self.latencies)
+        return s[min(int(0.95 * len(s)), len(s) - 1)]
+
+    def mean_accuracy(self) -> float:
+        return self.accuracy_weighted / max(self.served, 1)
+
+
+class _Instance:
+    __slots__ = ("idx", "variant", "chips", "nominal", "busy", "alive",
+                 "busy_until", "current")
+
+    def __init__(self, idx: int, variant: Variant, chips: int, nominal: float):
+        self.idx = idx
+        self.variant = variant
+        self.chips = chips
+        self.nominal = nominal
+        self.busy = False
+        self.alive = True
+        self.busy_until = 0.0
+        self.current: Optional[Tuple[int, float]] = None   # (req id, start)
+
+
+def run_des(g: CG.ConfigGraph, variants: Sequence[Variant],
+            arrival_rps: float, horizon_s: float,
+            des: DESConfig = DESConfig(),
+            service_time_fn: Optional[Callable] = None) -> DESResult:
+    """Event-driven simulation of one configuration for ``horizon_s``."""
+    rng = random.Random(des.seed)
+    by_name = {v.name: v for v in variants}
+    instances: List[_Instance] = []
+    for (vname, chips), w in g.edges:
+        v = by_name[vname]
+        sp = PM.cached_point(v, chips)
+        for _ in range(w):
+            instances.append(_Instance(len(instances), v, chips, sp.latency_s))
+
+    def sample_service(inst: _Instance) -> float:
+        if service_time_fn is not None:
+            return service_time_fn(inst.variant, inst.chips)
+        t = inst.nominal * math.exp(rng.gauss(0.0, des.jitter_sigma))
+        if des.straggler_prob and rng.random() < des.straggler_prob:
+            t *= des.straggler_mult
+        return t
+
+    # event heap: (time, seq, kind, payload)
+    ARRIVE, FINISH, FAIL, REPAIR, HEDGE_CHECK = range(5)
+    heap: List[Tuple[float, int, int, tuple]] = []
+    seq = 0
+
+    def push(t, kind, payload):
+        nonlocal seq
+        heapq.heappush(heap, (t, seq, kind, payload))
+        seq += 1
+
+    push(rng.expovariate(arrival_rps), ARRIVE, ())
+    for inst in instances:
+        if des.fail_rate_per_instance_hz > 0:
+            push(rng.expovariate(des.fail_rate_per_instance_hz), FAIL, (inst.idx,))
+
+    queue: List[Tuple[int, float]] = []          # (req id, arrival time)
+    req_id = 0
+    done: Dict[int, bool] = {}
+    latencies: List[float] = []
+    acc_w = 0.0
+    energy = 0.0
+    hedges = failures = requeues = 0
+
+    def dispatch(now: float):
+        nonlocal energy
+        free = [i for i in instances if i.alive and not i.busy]
+        while queue and free:
+            inst = free.pop(0)
+            rid, t_arr = queue.pop(0)
+            if done.get(rid):
+                continue
+            svc = sample_service(inst)
+            inst.busy = True
+            inst.busy_until = now + svc
+            inst.current = (rid, t_arr)
+            energy += inst.chips * PM.P_BUSY_W * svc
+            push(now + svc, FINISH, (inst.idx, rid, t_arr))
+            if des.hedge:
+                push(now + inst.nominal * des.hedge_factor, HEDGE_CHECK,
+                     (inst.idx, rid, t_arr))
+
+    while heap:
+        now, _, kind, payload = heapq.heappop(heap)
+        if now > horizon_s:
+            break
+        if kind == ARRIVE:
+            queue.append((req_id, now))
+            req_id += 1
+            push(now + rng.expovariate(arrival_rps), ARRIVE, ())
+            dispatch(now)
+        elif kind == FINISH:
+            idx, rid, t_arr = payload
+            inst = instances[idx]
+            if inst.current and inst.current[0] == rid and inst.alive:
+                inst.busy = False
+                inst.current = None
+                if not done.get(rid):
+                    done[rid] = True
+                    latencies.append(now - t_arr)
+                    acc_w += inst.variant.accuracy
+                dispatch(now)
+        elif kind == HEDGE_CHECK:
+            idx, rid, t_arr = payload
+            if not done.get(rid) and instances[idx].current \
+                    and instances[idx].current[0] == rid:
+                hedges += 1
+                queue.insert(0, (rid, t_arr))    # duplicate at head of queue
+                dispatch(now)
+        elif kind == FAIL:
+            (idx,) = payload
+            inst = instances[idx]
+            if inst.alive:
+                inst.alive = False
+                failures += 1
+                if inst.current is not None:     # re-queue in-flight work
+                    rid, t_arr = inst.current
+                    if not done.get(rid):
+                        queue.insert(0, (rid, t_arr))
+                        requeues += 1
+                    inst.current = None
+                    inst.busy = False
+                push(now + des.repair_time_s, REPAIR, (idx,))
+        elif kind == REPAIR:
+            (idx,) = payload
+            instances[idx].alive = True
+            if des.fail_rate_per_instance_hz > 0:
+                push(now + rng.expovariate(des.fail_rate_per_instance_hz),
+                     FAIL, (idx,))
+            dispatch(now)
+
+    # total = busy chip-seconds at P_BUSY + remaining chip-seconds at P_IDLE
+    busy_j = energy
+    busy_chip_s = busy_j / PM.P_BUSY_W
+    idle_chip_s = max(g.total_chips * horizon_s - busy_chip_s, 0.0)
+    energy = busy_j + idle_chip_s * PM.P_IDLE_W
+
+    return DESResult(latencies, acc_w, len(latencies), energy,
+                     hedges, failures, requeues)

@@ -1,0 +1,143 @@
+"""Fault-tolerant checkpointing: atomic writes, async save thread, and
+*elastic* restore (a checkpoint written on one mesh restores onto any other
+mesh / device count — specs are recomputed from the sharding rules, not
+stored per-device).
+
+Layout:  <dir>/step_<n>/arrays.npz + manifest.json ; a top-level LATEST file
+is updated last (rename is atomic on POSIX), so a crash mid-save never
+corrupts the restore point.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import tempfile
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+def save(state, step: int, ckpt_dir: str) -> str:
+    """Synchronous atomic save.  Returns the step directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=ckpt_dir)
+    try:
+        arrays = _flatten(state)
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "keys": sorted(arrays.keys()),
+            "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+            "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    # LATEST pointer: write-temp + rename = atomic
+    latest_tmp = os.path.join(ckpt_dir, ".LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(f"step_{step:08d}")
+    os.rename(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    path = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return int(f.read().strip().split("_")[1])
+
+
+def restore(ckpt_dir: str, target_tree, step: Optional[int] = None,
+            shardings=None):
+    """Restore into the structure of ``target_tree``.  ``shardings`` (optional
+    pytree of NamedSharding for the *current* mesh) enables elastic restore:
+    host arrays are device_put with the new layout regardless of the layout
+    at save time."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(d, "arrays.npz"))
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(leaves))
+    out = []
+    for (path, leaf), shard in zip(leaves, shard_leaves):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = data[key]
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        arr = arr.astype(leaf.dtype)
+        out.append(jax.device_put(arr, shard) if shard is not None else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class AsyncCheckpointer:
+    """Background save thread: the train loop hands off host copies and keeps
+    stepping; ``wait()`` drains before exit.  One in-flight save at a time
+    (a second enqueue blocks) — bounded memory, never drops a checkpoint."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue(maxsize=1)
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            state_host, step = item
+            try:
+                save(state_host, step, self.ckpt_dir)
+                self._gc()
+            except BaseException as e:  # surfaced on next submit/wait
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _gc(self):
+        steps = sorted(d for d in os.listdir(self.ckpt_dir) if d.startswith("step_"))
+        for d in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, d), ignore_errors=True)
+
+    def submit(self, state, step: int):
+        if self._err:
+            raise self._err
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        self._q.put((host, step))
+
+    def wait(self):
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._thread.join()

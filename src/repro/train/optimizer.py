@@ -1,0 +1,83 @@
+"""AdamW + global-norm clipping + cosine schedule (no optax dependency).
+
+Optimizer state mirrors the param pytree, so GSPMD shards it with the same
+PartitionSpecs as the parameters (ZeRO-style sharding can be layered by
+passing model-axis specs for m/v — see sharding.rules.param_specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params) -> dict:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state, params
+                 ) -> Tuple[Any, dict, dict]:
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, opt_state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g), opt_state["v"], grads)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+    lr = schedule(cfg, step)
+
+    def upd(p, m, v):
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        # cast the (ZeRO-sharded) update to the param dtype BEFORE it crosses
+        # shards: the post-update re-gather then moves bf16, not f32
+        # (measured 4.8 GiB/step of f32 weight all-gathers on gemma3 —
+        # EXPERIMENTS.md §Perf A6; bf16-delta rounding is the standard
+        # mixed-precision trade and is covered by the convergence test).
+        return p - (lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": m, "v": v, "step": step}, metrics

@@ -1,0 +1,16 @@
+# NOTE: XLA_FLAGS / host-device-count is deliberately NOT set here — smoke
+# tests and benchmarks must see the real single CPU device.  Tests that need
+# a multi-device mesh launch a subprocess with the flag set before jax import
+# (see tests/multidev/_runner.py).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    import jax
+    return jax.random.PRNGKey(0)

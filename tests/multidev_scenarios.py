@@ -1,0 +1,161 @@
+"""Multi-device test scenarios, run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (set by the parent BEFORE
+jax initializes — conftest deliberately leaves the main process at 1 device).
+
+Each function prints "SCENARIO OK" on success; test_multidev.py asserts it.
+"""
+import os
+import sys
+
+if __name__ == "__main__":
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+
+
+def scenario_lower_all_smoke_shapes():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    import repro.configs.shapes as SH
+    SH.SHAPES = {
+        "train_4k": SH.ShapeCell("train_4k", 64, 8, "train"),
+        "prefill_32k": SH.ShapeCell("prefill_32k", 128, 4, "prefill"),
+        "decode_32k": SH.ShapeCell("decode_32k", 128, 8, "decode"),
+        "long_500k": SH.ShapeCell("long_500k", 256, 1, "decode"),
+    }
+    from repro.launch import steps
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    archs = ["qwen3-moe-30b-a3b", "gemma3-27b", "mamba2-2.7b", "zamba2-2.7b",
+             "seamless-m4t-large-v2", "qwen2-vl-7b"]
+    with mesh:
+        for arch in archs:
+            cfg = get_smoke_config(arch).with_(dtype=jnp.bfloat16)
+            for shape in SH.SHAPES:
+                jitted, sds = steps.build_step_for_cell(cfg, mesh, shape)
+                compiled = jitted.lower(*sds).compile()
+                assert compiled.memory_analysis().temp_size_in_bytes >= 0
+
+
+def scenario_ddp_compressed_training():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.models import registry as R
+    from repro.train import optimizer as O
+    from repro.train import train_loop as TL
+    from repro.train import data as DATA
+    cfg = get_smoke_config("qwen2-0.5b").with_(
+        n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, d_head=8, d_ff=64,
+        vocab_size=64, dtype=jnp.float32)
+    mesh = jax.make_mesh((8,), ("data",))
+    params = R.init_params(jax.random.PRNGKey(0), cfg)
+    opt_cfg = O.AdamWConfig(lr=1e-3)
+    ds = DATA.SyntheticLM(DATA.DataConfig(cfg.vocab_size, 16, 16))
+    batch = {k: jnp.asarray(v) for k, v in ds.batch_at(0).items()}
+
+    results = {}
+    for comp in (None, "bf16", "int8"):
+        state = {"params": R.init_params(jax.random.PRNGKey(0), cfg),
+                 "opt": O.init_opt_state(params)}
+        step = TL.make_ddp_train_step(cfg, opt_cfg, mesh, compressor=comp)
+        with mesh:
+            state, m = step(state, batch)
+        results[comp] = (float(m["loss"]),
+                         [np.asarray(x) for x in jax.tree.leaves(state["params"])])
+    # compressed training must track f32 within tolerance after one step
+    for comp in ("bf16", "int8"):
+        assert abs(results[comp][0] - results[None][0]) < 1e-2
+        for a, b in zip(results[comp][1], results[None][1]):
+            np.testing.assert_allclose(a, b, rtol=0.1, atol=2e-3)
+
+
+def scenario_elastic_checkpoint_restore():
+    """Save on a (2,4) mesh layout, restore onto a (8,) mesh — device-count
+    elasticity through the checkpoint path."""
+    import tempfile
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_smoke_config
+    from repro.models import registry as R
+    from repro.sharding import rules
+    from repro.train import checkpoint as CKPT
+    cfg = get_smoke_config("qwen3-1.7b").with_(dtype=jnp.float32)
+    mesh_a = jax.make_mesh((2, 4), ("data", "model"))
+    params = R.init_params(jax.random.PRNGKey(0), cfg)
+    specs = rules.param_specs(jax.eval_shape(lambda: params), cfg, mesh_a)
+    sharded = jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh_a, s)), params, specs)
+    with tempfile.TemporaryDirectory() as d:
+        CKPT.save({"params": sharded}, 1, d)
+        mesh_b = jax.make_mesh((8,), ("model",))
+        specs_b = rules.param_specs(jax.eval_shape(lambda: params), cfg, mesh_b)
+        shards_b = jax.tree.map(lambda s: NamedSharding(mesh_b, s), specs_b)
+        restored = CKPT.restore(d, {"params": jax.eval_shape(lambda: params)},
+                                shardings={"params": shards_b})
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def scenario_gspmd_vs_single_device_numerics():
+    """The sharded train step computes the same loss as single-device."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    import repro.configs.shapes as SH
+    SH.SHAPES = {"train_4k": SH.ShapeCell("train_4k", 32, 8, "train")}
+    from repro.launch import steps
+    from repro.models import registry as R
+    from repro.train import optimizer as O, train_loop as TL, data as DATA
+    cfg = get_smoke_config("qwen3-1.7b").with_(dtype=jnp.float32)
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    opt_cfg = O.AdamWConfig()
+    params = R.init_params(jax.random.PRNGKey(0), cfg)
+    state = TL.make_train_state(params, opt_cfg)
+    ds = DATA.SyntheticLM(DATA.DataConfig(cfg.vocab_size, 32, 8))
+    batch = {k: jnp.asarray(v) for k, v in ds.batch_at(0).items()}
+
+    loss_1dev = float(TL.lm_loss(params, batch, cfg)[0])
+    with mesh:
+        jitted, _ = steps.build_train(cfg, mesh, "train_4k", opt_cfg=opt_cfg,
+                                      accum=1)
+        new_state, metrics = jitted(state, batch)
+        loss_sharded = float(metrics["loss"])
+    assert abs(loss_sharded - loss_1dev) / loss_1dev < 5e-4, \
+        (loss_sharded, loss_1dev)
+
+
+def scenario_seq_sharded_decode_numerics():
+    """Sequence-sharded KV decode == single-device decode logits."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_smoke_config
+    from repro.models import registry as R
+    from repro.sharding import rules
+    cfg = get_smoke_config("glm4-9b").with_(dtype=jnp.float32)
+    params = R.init_params(jax.random.PRNGKey(0), cfg)
+    cache = R.make_cache(params, cfg, 2, 64, dtype=jnp.float32)
+    toks = jnp.array([[3], [5]], dtype=jnp.int32)
+    ref_logits, _ = R.decode_step(params, cache, {"tokens": toks}, cfg)
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    cache_specs = rules.cache_specs(jax.eval_shape(lambda: cache), mesh, cfg,
+                                    seq_shard=True)
+    with mesh:
+        p_specs = rules.param_specs(jax.eval_shape(lambda: params), cfg, mesh)
+        ps = jax.tree.map(lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+                          params, p_specs)
+        cs = jax.tree.map(lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+                          cache, cache_specs)
+        logits, _ = jax.jit(lambda p, c, t: R.decode_step(p, c, {"tokens": t}, cfg))(
+            ps, cs, toks)
+    np.testing.assert_allclose(np.asarray(ref_logits), np.asarray(logits),
+                               rtol=2e-4, atol=2e-4)
+
+
+if __name__ == "__main__":
+    name = sys.argv[1]
+    globals()[f"scenario_{name}"]()
+    print("SCENARIO OK")

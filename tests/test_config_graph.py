@@ -1,0 +1,116 @@
+"""Configuration-graph invariants (paper §4.2) — unit + hypothesis property
+tests: GED metric properties, neighbor-move soundness, additivity, catalog."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import catalog as CAT
+from repro.core import config_graph as CG
+from repro.core import slices as SL
+
+VARIANTS = CAT.get_family("efficientnet")
+VNAMES = [v.name for v in VARIANTS]
+
+
+def graph_strategy(max_blocks=3):
+    """Random valid configuration graphs."""
+    @st.composite
+    def _g(draw):
+        rng = random.Random(draw(st.integers(0, 10_000)))
+        n_blocks = draw(st.integers(1, max_blocks))
+        return CG.random_config("efficientnet", VARIANTS, n_blocks, rng), n_blocks
+    return _g()
+
+
+def test_partition_catalog():
+    cat = SL.partition_catalog()
+    assert len(cat) == 36
+    assert all(sum(p) == 16 for p in cat)
+    assert all(set(p) <= set(SL.SLICE_SIZES) for p in cat)
+    assert (16,) in cat and (1,) * 16 in cat
+    # catalog indices are stable (C1-style references in benchmarks)
+    assert SL.config_number((16,)) == 0
+
+
+@given(graph_strategy())
+@settings(max_examples=40, deadline=None)
+def test_random_config_valid(gn):
+    g, n_blocks = gn
+    assert g.is_valid(n_blocks, VARIANTS)
+    assert g.total_chips == n_blocks * SL.BLOCK_CHIPS
+
+
+@given(graph_strategy(), graph_strategy())
+@settings(max_examples=40, deadline=None)
+def test_ged_metric_properties(gn1, gn2):
+    g1, _ = gn1
+    g2, _ = gn2
+    assert CG.ged(g1, g1) == 0
+    assert CG.ged(g1, g2) == CG.ged(g2, g1)
+    assert CG.ged(g1, g2) >= 0
+
+
+@given(graph_strategy(), graph_strategy(), graph_strategy())
+@settings(max_examples=25, deadline=None)
+def test_ged_triangle_inequality(a, b, c):
+    g1, g2, g3 = a[0], b[0], c[0]
+    assert CG.ged(g1, g3) <= CG.ged(g1, g2) + CG.ged(g2, g3)
+
+
+def test_ged_paper_examples():
+    """Fig. 7 step 2 semantics: swapping one instance's variant = 2;
+    moving one instance to another slice type = 2."""
+    g1 = CG.ConfigGraph.from_dict("efficientnet", {("B1", 1): 2, ("B3", 2): 1})
+    g_swap = CG.ConfigGraph.from_dict("efficientnet", {("B1", 1): 1, ("B7", 1): 1,
+                                                       ("B3", 2): 1})
+    assert CG.ged(g1, g_swap) == 2
+    g_move = CG.ConfigGraph.from_dict("efficientnet", {("B1", 1): 2, ("B1", 2): 1})
+    assert CG.ged(g1, g_move) == 2
+
+
+@given(graph_strategy())
+@settings(max_examples=25, deadline=None)
+def test_neighbors_sound(gn):
+    g, n_blocks = gn
+    for nb in CG.neighbors(g, VARIANTS):
+        assert CG.ged(g, nb) <= 4                       # paper's threshold
+        assert nb.total_chips == g.total_chips          # chips conserved
+        assert nb.is_valid(n_blocks, VARIANTS)
+        assert nb.edges != g.edges
+
+
+@given(graph_strategy(), graph_strategy())
+@settings(max_examples=30, deadline=None)
+def test_additivity(a, b):
+    """Paper §4.2: adding blocks = edge-weight addition; subtract inverts."""
+    g1, n1 = a
+    g2, n2 = b
+    s = g1.add(g2)
+    assert s.total_chips == g1.total_chips + g2.total_chips
+    back = s.subtract(g2)
+    assert back.edges == g1.edges
+
+
+def test_canonicalization():
+    """Different (x^p, x^v) placements with the same slice-type multiset map
+    to the same graph (Definition 1 collapse)."""
+    w = {("B1", 2): 2, ("B7", 4): 3}
+    g1 = CG.ConfigGraph.from_dict("efficientnet", dict(w))
+    g2 = CG.ConfigGraph.from_dict("efficientnet", dict(reversed(list(w.items()))))
+    assert g1.edges == g2.edges and CG.ged(g1, g2) == 0
+
+
+def test_oom_edges_rejected():
+    """A variant that cannot fit a slice invalidates the configuration —
+    the paper disables such edges."""
+    big = CAT.Variant("fam", "huge", 9, 0.99, 1e3, 2e5, 40.0)  # 40 GB > 2c HBM
+    g = CG.ConfigGraph.from_dict("fam", {("huge", 2): 8})
+    assert not g.is_valid(1, [big])
+    g2 = CG.ConfigGraph.from_dict("fam", {("huge", 4): 4})
+    assert g2.is_valid(1, [big])
+
+
+def test_uniform_constructor():
+    g = CG.ConfigGraph.uniform("efficientnet", "B7", 16, 10)
+    assert g.n_instances == 10 and g.total_chips == 160
