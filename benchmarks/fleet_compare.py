@@ -1,0 +1,99 @@
+"""Fleet-layer benchmark: {single-region CLOVER} vs {fleet + forecast +
+shifting + routing} carbon-per-request on the three bundled regions, plus an
+ablation over the fleet's levers.
+
+Prints one CSV row per configuration and writes the table to
+benchmarks/out/fleet_compare.csv.
+
+Usage:  PYTHONPATH=src python -m benchmarks.fleet_compare [--hours 24] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+REGIONS = ("CISO-March", "CISO-September", "ESO-March")
+
+
+def run(hours: float, family: str, seed: int):
+    from repro.core import carbon as CB
+    from repro.fleet import fleet_sim as FS
+
+    warmup = 24 * 3600.0
+    traces = {r: CB.make_trace(r, hours=24.0 + hours) for r in REGIONS}
+    rows = []
+
+    base_cfg = dict(warmup_s=warmup, seed=seed)
+    singles = {r: FS.single_region_baseline(family, tr,
+                                            FS.FleetConfig(**base_cfg))
+               for r, tr in traces.items()}
+    for r, rep in singles.items():
+        rows.append({"config": f"single:{r}",
+                     "carbon_per_req_mg": rep.carbon_per_req_g() * 1e3,
+                     "accuracy": rep.accuracy,
+                     "p95_over_sla": rep.p95_latency_s / rep.sla_target_s,
+                     "deadline_misses": "",
+                     "carbon_kg": rep.carbon_g / 1e3})
+
+    ablations = [
+        ("fleet:full", {}),
+        ("fleet:no-shift", {"shifting_on": False}),
+        ("fleet:no-route", {"routing_on": False}),
+        ("fleet:no-predict", {"predictive_on": False}),
+        ("fleet:no-elastic", {"elastic": False}),
+        ("fleet:lp-shifter", {"shifter": "lp"}),
+    ]
+    for name, kw in ablations:
+        cfg = FS.FleetConfig(**base_cfg, **kw)
+        rep = FS.run_fleet(family, traces, cfg)
+        rows.append({"config": name,
+                     "carbon_per_req_mg": rep.carbon_per_req_g() * 1e3,
+                     "accuracy": rep.accuracy,
+                     "p95_over_sla": rep.p95_s / rep.sla_target_s,
+                     "deadline_misses": len(rep.deadline_misses),
+                     "carbon_kg": rep.carbon_g / 1e3})
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hours", type=float, default=24.0)
+    ap.add_argument("--family", default="efficientnet")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fast", action="store_true",
+                    help="12h horizon for smoke runs")
+    args = ap.parse_args()
+    hours = 12.0 if args.fast else args.hours
+
+    t0 = time.time()
+    rows = run(hours, args.family, args.seed)
+    dt = time.time() - t0
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "fleet_compare.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+
+    best_single = min((r for r in rows if r["config"].startswith("single")),
+                      key=lambda r: r["carbon_per_req_mg"])
+    print(f"{'config':20s} {'mg/req':>8s} {'acc':>6s} {'p95/SLA':>8s} "
+          f"{'misses':>7s}")
+    for r in rows:
+        save = (1 - r["carbon_per_req_mg"]
+                / best_single["carbon_per_req_mg"]) * 100
+        print(f"{r['config']:20s} {r['carbon_per_req_mg']:8.4f} "
+              f"{r['accuracy']:6.3f} {r['p95_over_sla']:8.2f} "
+              f"{str(r['deadline_misses']):>7s}  ({save:+.1f}% vs best single)")
+    print(f"# wall {dt:.1f}s → {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -36,6 +36,35 @@ class CarbonTrace:
     def mean(self) -> float:
         return float(np.trapezoid(self.intensity, self.times_s) / self.duration_s)
 
+    # --- forecast hooks (fleet/forecast.py builds on these) -----------------
+    def history(self, t: float) -> "CarbonTrace":
+        """Samples observable at wall-clock ``t`` (times_s ≤ t) — the only
+        view an *honest* online forecaster may fit on."""
+        n = int(np.searchsorted(self.times_s, t, side="right"))
+        n = max(n, 1)
+        return CarbonTrace(self.name, self.times_s[:n], self.intensity[:n])
+
+    def slice(self, t0: float, t1: float, rebase: bool = True) -> "CarbonTrace":
+        """Sub-trace over [t0, t1] with interpolated endpoints; ``rebase``
+        shifts the time axis so the slice starts at 0 (what a per-region
+        backtest or a re-planning window wants)."""
+        t0 = max(t0, float(self.times_s[0]))
+        t1 = min(t1, float(self.times_s[-1]))
+        if t1 <= t0:
+            raise ValueError(f"empty slice [{t0}, {t1}] of {self.name}")
+        inner = (self.times_s > t0) & (self.times_s < t1)
+        ts = np.concatenate(([t0], self.times_s[inner], [t1]))
+        ci = np.concatenate(([self.at(t0)], self.intensity[inner], [self.at(t1)]))
+        if rebase:
+            ts = ts - t0
+        return CarbonTrace(self.name, ts, ci)
+
+    def window_mean(self, t0: float, t1: float) -> float:
+        """Time-averaged intensity over [t0, t1] (trapezoid rule) — the CI a
+        fluid window serving uniformly across the interval actually sees."""
+        s = self.slice(t0, t1, rebase=False)
+        return float(np.trapezoid(s.intensity, s.times_s) / (s.times_s[-1] - s.times_s[0]))
+
 
 def _diurnal(hours: np.ndarray, base: float, solar_dip: float, noise: float,
              wind: float, seed: int, dip_width: float = 4.0,

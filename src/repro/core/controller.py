@@ -6,15 +6,29 @@ Re-invocation triggers (paper §4.2): carbon-intensity change beyond a
 threshold (default 5 %), accuracy-threshold violation, SLA-limit change, or a
 λ-parameter change.  The controller is driven by the simulator (or by the
 real-execution engine) through ``maybe_reoptimize``.
+
+On top of the paper's reactive trigger, an optional *predictive* trigger
+(fleet layer) consults a carbon-intensity forecaster: if the forecast CI at
+``t + forecast_horizon_s`` departs from the last-optimized CI beyond the same
+threshold, the controller re-optimizes *ahead* of the swing against a blend
+of current and forecast intensity — so the config is already right when the
+solar valley (or its evening ramp) arrives, instead of one threshold-crossing
+late.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Optional, Protocol, Tuple
 
 from repro.core import annealing as SA
 from repro.core import config_graph as CG
 from repro.core import schemes as SCH
+
+
+class CIForecaster(Protocol):
+    """Duck type implemented by fleet.forecast.Forecaster subclasses."""
+
+    def predict(self, t: float, horizon_s: float) -> float: ...
 
 
 @dataclasses.dataclass
@@ -23,6 +37,7 @@ class Invocation:
     ci: float
     outcome: Optional[SA.SAOutcome]
     config: CG.ConfigGraph
+    predictive: bool = False            # fired by the forecast trigger
 
 
 @dataclasses.dataclass
@@ -30,8 +45,12 @@ class Controller:
     scheme: SCH.Scheme
     ctx: SCH.SchemeContext
     ci_threshold: float = 0.05          # 5 % change re-invokes (paper §5.2.2)
+    forecaster: Optional[CIForecaster] = None
+    forecast_horizon_s: float = 3600.0
+    forecast_blend: float = 0.5         # weight of forecast CI when acting early
     config: Optional[CG.ConfigGraph] = None
-    last_opt_ci: Optional[float] = None
+    last_opt_ci: Optional[float] = None        # observed CI at last invocation
+    last_opt_hat: Optional[float] = None       # forecast CI at last invocation
     invocations: List[Invocation] = dataclasses.field(default_factory=list)
 
     def start(self, t: float, ci: float) -> CG.ConfigGraph:
@@ -40,24 +59,51 @@ class Controller:
             self.config, outcome = self.scheme.reoptimize(self.ctx, ci, self.config)
             self.invocations.append(Invocation(t, ci, outcome, self.config))
             self.last_opt_ci = ci
+            self.last_opt_hat = (self.forecaster.predict(t, self.forecast_horizon_s)
+                                 if self.forecaster is not None else ci)
         return self.config
 
-    def should_reoptimize(self, ci: float) -> bool:
+    def _drifted(self, anchor: Optional[float], ci: float) -> bool:
+        if anchor is None:
+            return True
+        return abs(ci - anchor) / max(anchor, 1e-9) > self.ci_threshold
+
+    def _forecast_ci(self, t: Optional[float]) -> Optional[float]:
+        if self.forecaster is None or t is None:
+            return None
+        return self.forecaster.predict(t, self.forecast_horizon_s)
+
+    def should_reoptimize(self, ci: float, t: Optional[float] = None) -> bool:
+        """Reactive trigger: observed CI drifted from the observed CI at the
+        last invocation (paper §4.2).  Predictive trigger: the forecast CI at
+        t + horizon drifted from the forecast at the last invocation.  Each
+        trigger compares against its *own* anchor — comparing the live
+        observation against a stored blend would re-trip the threshold every
+        window for as long as observation and forecast disagree (trigger
+        ping-pong)."""
         if not self.scheme.carbon_aware:
             return False
-        if self.last_opt_ci is None:
+        if self._drifted(self.last_opt_ci, ci):
             return True
-        return abs(ci - self.last_opt_ci) / max(self.last_opt_ci, 1e-9) > self.ci_threshold
+        ci_hat = self._forecast_ci(t)
+        return ci_hat is not None and self._drifted(self.last_opt_hat, ci_hat)
 
     def maybe_reoptimize(self, t: float, ci: float
                          ) -> Tuple[CG.ConfigGraph, Optional[SA.SAOutcome]]:
         """Returns (active config, SA outcome if an invocation ran)."""
-        if not self.should_reoptimize(ci):
+        if not self.should_reoptimize(ci, t):
             return self.config, None
-        new_cfg, outcome = self.scheme.reoptimize(self.ctx, ci, self.config)
+        predictive = not self._drifted(self.last_opt_ci, ci)  # forecast fired
+        ci_hat = self._forecast_ci(t)
+        ci_opt = ci
+        if predictive:
+            b = self.forecast_blend
+            ci_opt = (1.0 - b) * ci + b * ci_hat   # lead the trace
+        new_cfg, outcome = self.scheme.reoptimize(self.ctx, ci_opt, self.config)
         self.config = new_cfg
         self.last_opt_ci = ci
-        self.invocations.append(Invocation(t, ci, outcome, new_cfg))
+        self.last_opt_hat = ci_hat if ci_hat is not None else ci
+        self.invocations.append(Invocation(t, ci_opt, outcome, new_cfg, predictive))
         return new_cfg, outcome
 
     # --- elastic scaling (graph additivity, paper §4.2) -------------------------

@@ -1,0 +1,76 @@
+"""Two-class fleet workload (fleet layer).
+
+The single-cluster simulator serves one Poisson stream under an SLA.  Real
+inference fleets also carry delay-tolerant batch work — embedding backfills,
+offline evals, nightly re-scoring — that has a *deadline*, not a tail-latency
+target.  That second class is exactly the lever temporal shifting needs: its
+execution window is wide enough to reach the next low-carbon valley.
+
+  interactive  — rate ``interactive_rps``, served immediately, p95 ≤ SLA.
+  deferrable   — ``DeferrableJob``s: ``work_req`` requests that may be served
+                 any time in [arrival_s, deadline_s].
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import List, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class DeferrableJob:
+    job_id: str
+    arrival_s: float               # earliest start
+    work_req: float                # total requests to serve
+    deadline_s: float              # all work done by here
+
+    @property
+    def slack_s(self) -> float:
+        return self.deadline_s - self.arrival_s
+
+    def feasible_in(self, t0: float, t1: float) -> bool:
+        """May this job run (partially) inside window [t0, t1]?  Work placed
+        in a window must finish by the deadline, so the window must end in
+        time."""
+        return t0 >= self.arrival_s and t1 <= self.deadline_s
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetWorkload:
+    interactive_rps: float         # fleet-wide interactive arrival rate
+    jobs: Sequence[DeferrableJob]
+
+    @property
+    def deferrable_work(self) -> float:
+        return sum(j.work_req for j in self.jobs)
+
+    def total_work(self, duration_s: float) -> float:
+        return self.interactive_rps * duration_s + self.deferrable_work
+
+
+def make_workload(interactive_rps: float, duration_s: float,
+                  deferrable_frac: float = 0.25, n_jobs: int = 12,
+                  min_slack_s: float = 6 * 3600.0,
+                  max_slack_s: float = 18 * 3600.0,
+                  seed: int = 0) -> FleetWorkload:
+    """Deferrable work totals ``deferrable_frac`` of the interactive volume,
+    split into ``n_jobs`` jobs arriving through the first half of the horizon
+    with uniform slack in [min_slack, max_slack] (clamped to the horizon).
+
+    The last-arrival cap keeps every job at least ``min_slack_s`` of runway,
+    so a feasible schedule exists whenever aggregate capacity does."""
+    rng = random.Random(seed)
+    total_deferrable = deferrable_frac * interactive_rps * duration_s
+    latest_arrival = min(duration_s / 2.0, duration_s - min_slack_s)
+    if latest_arrival < 0:
+        raise ValueError("horizon shorter than min_slack_s")
+    shares = [rng.uniform(0.5, 1.5) for _ in range(n_jobs)]
+    scale = total_deferrable / sum(shares)
+    jobs: List[DeferrableJob] = []
+    for i, share in enumerate(shares):
+        arrival = rng.uniform(0.0, latest_arrival)
+        slack = rng.uniform(min_slack_s, max_slack_s)
+        deadline = min(arrival + slack, duration_s)
+        jobs.append(DeferrableJob(f"job{i:02d}", arrival, share * scale,
+                                  deadline))
+    return FleetWorkload(interactive_rps, tuple(jobs))

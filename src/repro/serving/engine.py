@@ -11,6 +11,7 @@ would on a pod.  Examples/serve_clover.py runs the full loop.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -22,6 +23,19 @@ from repro.core import perf_model as PM
 from repro.core.catalog import Variant
 from repro.models import registry as R
 from repro.models.config import ModelConfig
+
+
+def latency_percentile(lats: Sequence[float], q: float) -> float:
+    """Percentile of a latency sample with correct rank rounding.
+
+    Nearest-rank on the sorted sample: rank = ceil(q/100 · n), clamped to
+    [1, n] — so p50 of [1, 2, 3, 4] is 2 (not 3, as naive ``n//2`` indexing
+    gives) and p95 never reads past the end of the list."""
+    if not lats:
+        return float("nan")
+    s = sorted(lats)
+    rank = math.ceil(q / 100.0 * len(s))
+    return s[min(max(rank, 1), len(s)) - 1]
 
 
 @dataclasses.dataclass
@@ -109,11 +123,11 @@ class RealEngine:
             lats.append(dt)
             accs.append(inst.ev.variant.accuracy)
             energy += inst.chips * PM.P_BUSY_W * dt
-        lats_sorted = sorted(lats)
         return {
             "served": len(prompts),
-            "p50_s": lats_sorted[len(lats) // 2],
-            "p95_s": lats_sorted[min(int(0.95 * len(lats)), len(lats) - 1)],
+            "p50_s": latency_percentile(lats, 50.0),
+            "p95_s": latency_percentile(lats, 95.0),
+            "p99_s": latency_percentile(lats, 99.0),
             "mean_accuracy": float(np.mean(accs)),
             "energy_j": energy,
         }

@@ -26,7 +26,6 @@ from repro.core import controller as CTRL
 from repro.core import objective as OBJ
 from repro.core import perf_model as PM
 from repro.core import schemes as SCH
-from repro.core import slices as SL
 from repro.core.catalog import Variant, get_family
 
 
@@ -40,6 +39,9 @@ class SimConfig:
     seed: int = 0
     reconfig_cost: bool = True
     accuracy_threshold_pct: Optional[float] = None
+    sla_target_s: Optional[float] = None   # override the derived p95 target
+                                           # (fleet baselines pin it so fleet
+                                           # and single runs share one SLA)
     sa: SA.SAConfig = dataclasses.field(default_factory=SA.SAConfig)
 
 
@@ -65,6 +67,97 @@ class SimReport:
         return self.carbon_g / max(self.served, 1.0)
 
 
+def weighted_p95(lat_samples: Sequence[Tuple[float, float]]) -> float:
+    """Request-weighted 95th percentile over (latency, weight) samples —
+    shared by per-cluster servers and fleet-wide merges."""
+    if not lat_samples:
+        return 0.0
+    samples = sorted(lat_samples)
+    total = sum(w for _, w in samples)
+    cum = 0.0
+    for lat, w in samples:
+        cum += w
+        if cum >= 0.95 * total:
+            return lat
+    return samples[-1][0]
+
+
+@dataclasses.dataclass
+class SegmentResult:
+    """One fluid window's outcome (returned so callers can build timelines)."""
+    res: OBJ.EvalResult
+    ci: float
+    served: float                  # interactive requests served this window
+    defer_served: float            # deferrable requests served this window
+    carbon_g: float
+    p95_s: float
+
+
+class FluidServer:
+    """The fluid-window service model, factored out of ``run_trace`` so the
+    multi-region fleet simulator (repro.fleet.fleet_sim) reuses it instead of
+    duplicating the backlog/SLA/carbon bookkeeping.
+
+    Two work classes: *interactive* requests count toward the p95/SLA
+    statistics and are served first; *deferrable* work (``defer_rps``) only
+    consumes capacity left over in the window and never enters the latency
+    books — it has a deadline, not an SLA.  With ``defer_rps=0`` the model is
+    exactly the original single-class ``serve_segment``.
+    """
+
+    def __init__(self, variants: Sequence[Variant], acct: CB.CarbonAccountant,
+                 sla_target_s: float, sla_slack: float = 1.001):
+        self.variants = variants
+        self.acct = acct
+        self.sla_target_s = sla_target_s
+        self.sla_slack = sla_slack
+        self.backlog = 0.0
+        self.defer_backlog = 0.0
+        self.served_total = 0.0
+        self.defer_served_total = 0.0
+        self.acc_weighted = 0.0
+        self.lat_samples: List[Tuple[float, float]] = []   # (p95, weight)
+        self.sla_over = 0
+        self.sla_windows = 0
+
+    def serve_segment(self, g: CG.ConfigGraph, start: float, dur: float,
+                      arrival_rps: float, defer_rps: float = 0.0,
+                      extra_latency_s: float = 0.0) -> SegmentResult:
+        res = OBJ.evaluate(g, self.variants, arrival_rps + defer_rps)
+        ci = self.acct.trace.at(start + dur / 2.0)
+        cap = res.capacity_rps * dur
+        work = self.backlog + arrival_rps * dur
+        served = min(work, cap)
+        self.backlog = work - served
+        defer_work = self.defer_backlog + defer_rps * dur
+        defer_served = min(defer_work, cap - served)
+        self.defer_backlog = defer_work - defer_served
+        wait = self.backlog / max(res.capacity_rps, 1e-9)
+        p95 = res.p95_latency_s + wait + extra_latency_s
+        carbon_g = self.acct.add(start, dur, res.power_w)
+        self.served_total += served
+        self.defer_served_total += defer_served
+        self.acc_weighted += res.accuracy * (served + defer_served)
+        if served > 0:
+            self.lat_samples.append((p95, served))
+            self.sla_windows += 1
+            if p95 > self.sla_target_s * self.sla_slack:
+                self.sla_over += 1
+        return SegmentResult(res, ci, served, defer_served, carbon_g, p95)
+
+    def weighted_p95(self) -> float:
+        return weighted_p95(self.lat_samples)
+
+    @property
+    def mean_accuracy(self) -> float:
+        return self.acc_weighted / max(self.served_total
+                                       + self.defer_served_total, 1e-9)
+
+    @property
+    def sla_violation_frac(self) -> float:
+        return self.sla_over / max(self.sla_windows, 1)
+
+
 def make_context(family: str, sim: SimConfig) -> Tuple[SCH.SchemeContext, float]:
     """Builds the scheme context; returns (ctx, arrival_rps)."""
     variants = get_family(family)
@@ -80,7 +173,8 @@ def make_context(family: str, sim: SimConfig) -> Tuple[SCH.SchemeContext, float]
         lam=sim.lam,
         a_base=base_eval.accuracy,
         c_base=base_eval.carbon_per_req_g(380.0),   # baseline avg US intensity
-        l_tail_s=base_eval.p95_latency_s,
+        l_tail_s=(sim.sla_target_s if sim.sla_target_s is not None
+                  else base_eval.p95_latency_s),
         max_accuracy_loss_pct=sim.accuracy_threshold_pct,
     )
     ctx = SCH.SchemeContext(family, variants, sim.n_blocks, arrival, obj,
@@ -95,6 +189,7 @@ def run_trace(scheme_name: str, family: str, trace: CB.CarbonTrace,
     controller = CTRL.Controller(scheme, ctx, ci_threshold=sim.ci_threshold)
     acct = CB.CarbonAccountant(trace)
     variants = ctx.variants
+    server = FluidServer(variants, acct, ctx.obj_cfg.l_tail_s)
 
     t = 0.0
     ci0 = trace.at(0.0)
@@ -102,40 +197,17 @@ def run_trace(scheme_name: str, family: str, trace: CB.CarbonTrace,
     # charge the initial optimization run's evaluation windows
     opt_time = 0.0
     n_evals = evals_ok = 0
-    backlog = 0.0
-    served_total = acc_weighted = 0.0
-    lat_samples: List[Tuple[float, float]] = []
-    sla_over = sla_windows = 0
     tl_t, tl_ci, tl_f, tl_acc, tl_pow, tl_cg = [], [], [], [], [], []
 
     def serve_segment(g: CG.ConfigGraph, start: float, dur: float):
-        nonlocal backlog, served_total, acc_weighted, sla_over, sla_windows
-        res = OBJ.evaluate(g, variants, arrival)
-        ci = trace.at(start + dur / 2.0)
-        work = backlog + arrival * dur
-        cap = res.capacity_rps * dur
-        served = min(work, cap)
-        backlog = work - served
-        wait = backlog / max(res.capacity_rps, 1e-9)
-        p95 = res.p95_latency_s + wait
-        g_carbon = acct.add(start, dur, res.power_w)
-        served_total_seg = served
-        served_totals = served_total_seg
-        served_total += served
-        acc_weighted += res.accuracy * served
-        if served > 0:
-            lat_samples.append((p95, served))
-            sla_windows += 1
-            if p95 > ctx.obj_cfg.l_tail_s * 1.001:
-                sla_over += 1
-        f = OBJ.objective_f(res, ci, ctx.obj_cfg)
+        seg = server.serve_segment(g, start, dur, arrival)
         tl_t.append(start)
-        tl_ci.append(ci)
-        tl_f.append(f)
-        tl_acc.append(res.accuracy)
-        tl_pow.append(res.power_w)
-        tl_cg.append(g_carbon / max(dur, 1e-9))
-        return res
+        tl_ci.append(seg.ci)
+        tl_f.append(OBJ.objective_f(seg.res, seg.ci, ctx.obj_cfg))
+        tl_acc.append(seg.res.accuracy)
+        tl_pow.append(seg.res.power_w)
+        tl_cg.append(seg.carbon_g / max(dur, 1e-9))
+        return seg.res
 
     def charge_invocation(outcome: Optional[SA.SAOutcome], start: float) -> float:
         """Serve each SA evaluation window under its candidate config."""
@@ -158,7 +230,7 @@ def run_trace(scheme_name: str, family: str, trace: CB.CarbonTrace,
     prev_config = config
     while t < trace.duration_s:
         ci = trace.at(t)
-        if controller.should_reoptimize(ci):
+        if controller.should_reoptimize(ci, t):
             new_cfg, outcome = controller.maybe_reoptimize(t, ci)
             t += charge_invocation(outcome, t)
             if sim.reconfig_cost and new_cfg.edges != prev_config.edges:
@@ -169,7 +241,7 @@ def run_trace(scheme_name: str, family: str, trace: CB.CarbonTrace,
                 idle_power = sum(PM.instance_power_w(c, 0.0) * w
                                  for (vn, c), w in new_cfg.edges)
                 acct.add(t, dt, idle_power)
-                backlog += arrival * dt
+                server.backlog += arrival * dt
                 t += dt
             prev_config = config = new_cfg
             continue
@@ -177,23 +249,13 @@ def run_trace(scheme_name: str, family: str, trace: CB.CarbonTrace,
         serve_segment(config, t, dur)
         t += dur
 
-    acc = acc_weighted / max(served_total, 1e-9)
-    lat_samples.sort()
-    total_served = sum(w for _, w in lat_samples)
-    cum, p95_overall = 0.0, (lat_samples[-1][0] if lat_samples else 0.0)
-    for lat, w in lat_samples:
-        cum += w
-        if cum >= 0.95 * total_served:
-            p95_overall = lat
-            break
-
-    sa_ctx = ctx
     return SimReport(
         scheme=scheme_name, family=family,
-        carbon_g=acct.carbon_g, served=served_total, dropped_backlog=backlog,
-        accuracy=acc, p95_latency_s=p95_overall,
-        sla_target_s=sa_ctx.obj_cfg.l_tail_s,
-        sla_violation_frac=sla_over / max(sla_windows, 1),
+        carbon_g=acct.carbon_g, served=server.served_total,
+        dropped_backlog=server.backlog,
+        accuracy=server.mean_accuracy, p95_latency_s=server.weighted_p95(),
+        sla_target_s=ctx.obj_cfg.l_tail_s,
+        sla_violation_frac=server.sla_violation_frac,
         opt_time_s=opt_time, opt_time_frac=opt_time / trace.duration_s,
         n_evals=n_evals, evals_sla_ok=evals_ok,
         n_invocations=len(controller.invocations),

@@ -3,7 +3,11 @@ tests: GED metric properties, neighbor-move soundness, additivity, catalog."""
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional 'hypothesis' dep "
+                         "(see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import catalog as CAT
 from repro.core import config_graph as CG

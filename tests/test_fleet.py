@@ -1,0 +1,253 @@
+"""Fleet subsystem: workload, shifting, routing, fleet simulation.
+
+Fast smoke tests run in tier-1; the 48 h end-to-end acceptance runs are
+marked ``slow`` (run them with ``pytest -m slow`` or ``-m "slow or not
+slow"``) so tier-1 wall-clock stays bounded."""
+import numpy as np
+import pytest
+
+from repro.core import carbon as CB
+from repro.core import controller as CTRL
+from repro.core import schemes as SCH
+from repro.fleet import fleet_sim as FS
+from repro.fleet import forecast as FC
+from repro.fleet import router as RT
+from repro.fleet import shifting as SH
+from repro.fleet import workload as WL
+from repro.serving import simulator as SIM
+
+REGIONS = ("CISO-March", "CISO-September", "ESO-March")
+
+
+# =============================================================================
+# workload
+# =============================================================================
+def test_workload_volume_and_slack():
+    wl = WL.make_workload(100.0, 48 * 3600.0, deferrable_frac=0.25,
+                          n_jobs=8, seed=3)
+    assert wl.deferrable_work == pytest.approx(0.25 * 100.0 * 48 * 3600.0)
+    for j in wl.jobs:
+        assert j.slack_s >= 6 * 3600.0 - 1e-6
+        assert j.deadline_s <= 48 * 3600.0 + 1e-6
+        assert j.arrival_s >= 0.0
+    assert wl.total_work(48 * 3600.0) == pytest.approx(
+        100.0 * 48 * 3600.0 * 1.25)
+
+
+# =============================================================================
+# shifting
+# =============================================================================
+def _slots_two_regions():
+    # clean region: cheap but small; dirty region: expensive but huge
+    slots = []
+    for k in range(8):
+        slots.append(SH.Slot("clean", k * 1800.0, 1800.0, 10.0, 100.0, 500.0))
+        slots.append(SH.Slot("dirty", k * 1800.0, 1800.0, 1000.0, 400.0, 500.0))
+    return slots
+
+
+def test_greedy_shift_prefers_low_ci_and_respects_caps():
+    jobs = [WL.DeferrableJob("a", 0.0, 30000.0, 4 * 3600.0)]
+    plan = SH.greedy_shift(jobs, _slots_two_regions())
+    assert plan.feasible
+    by_region = {}
+    for a in plan.allocations:
+        by_region[a.region] = by_region.get(a.region, 0.0) + a.work_req
+    # clean slots fill to capacity (8 × 10 rps × 1800 s = 144k > 30k, but
+    # only slots ending before the deadline qualify: 8 slots all do)
+    assert by_region.get("clean", 0.0) == pytest.approx(30000.0)
+    # per-slot capacity never exceeded
+    used = plan.by_slot()
+    for s in _slots_two_regions():
+        assert used.get((s.region, s.t0), 0.0) <= s.capacity_req + 1e-6
+
+
+def test_greedy_shift_respects_deadlines():
+    work = 5e6     # exceeds the 3.636M requests available before the deadline
+    jobs = [WL.DeferrableJob("tight", 0.0, work, 3600.0)]
+    plan = SH.greedy_shift(jobs, _slots_two_regions())
+    for a in plan.allocations:
+        assert a.t0 + a.dur_s <= 3600.0 + 1e-6
+    # 2 feasible slot-pairs × (10 + 1000) rps × 1800 s = 3.636M → partial
+    placed = plan.placed_work
+    assert placed == pytest.approx((10.0 + 1000.0) * 3600.0, rel=1e-6)
+    assert plan.unplaced["tight"] == pytest.approx(work - placed, rel=1e-6)
+
+
+def test_lp_shift_at_least_as_cheap_as_greedy():
+    pytest.importorskip("scipy")
+    rng = np.random.default_rng(0)
+    slots = [SH.Slot(f"r{i % 3}", (i // 3) * 1800.0, 1800.0,
+                     float(rng.uniform(5, 50)), float(rng.uniform(80, 400)),
+                     500.0) for i in range(30)]
+    jobs = [WL.DeferrableJob(f"j{k}", 0.0, 40000.0,
+                             (k + 3) * 3600.0) for k in range(4)]
+    g = SH.greedy_shift(jobs, slots)
+    lp = SH.lp_shift(jobs, slots)
+    assert lp.placed_work >= g.placed_work - 1e-6
+    if g.feasible and lp.feasible:
+        assert (lp.forecast_carbon_g(slots)
+                <= g.forecast_carbon_g(slots) * (1 + 1e-9))
+
+
+# =============================================================================
+# routing
+# =============================================================================
+def _snap(name, cap, energy, ci, delay=0.0, p95=0.005):
+    return RT.RegionSnapshot(name, cap, energy, ci, delay,
+                             lambda rate: p95 * (1 + rate / cap))
+
+
+def test_router_prefers_clean_region_within_caps():
+    snaps = [_snap("dirty", 1000.0, 500.0, 400.0),
+             _snap("clean", 1000.0, 500.0, 100.0)]
+    d = RT.route_interactive(500.0, snaps, sla_s=1.0, max_rho=0.85)
+    assert d.rate("clean") == pytest.approx(500.0)
+    assert d.rate("dirty") == 0.0
+    assert d.overflow_rps == 0.0
+
+
+def test_router_caps_at_max_rho_and_spills():
+    snaps = [_snap("clean", 400.0, 500.0, 100.0),
+             _snap("dirty", 1000.0, 500.0, 400.0)]
+    d = RT.route_interactive(500.0, snaps, sla_s=1.0, max_rho=0.85)
+    assert d.rate("clean") == pytest.approx(0.85 * 400.0)
+    assert d.rate("dirty") == pytest.approx(500.0 - 0.85 * 400.0)
+
+
+def test_router_latency_budget_excludes_far_region():
+    snaps = [_snap("far-clean", 1000.0, 500.0, 100.0, delay=0.9, p95=0.2),
+             _snap("near-dirty", 1000.0, 500.0, 400.0, delay=0.0, p95=0.2)]
+    d = RT.route_interactive(300.0, snaps, sla_s=1.0, max_rho=0.85)
+    # far region p95(0.2·(1+ρ)) + 0.9 delay > 1.0 SLA for any useful rate
+    assert d.rate("far-clean") < d.rate("near-dirty")
+
+
+def test_router_hysteresis_keeps_incumbent_on_near_tie():
+    snaps = [_snap("a", 1000.0, 500.0, 100.0),
+             _snap("b", 1000.0, 500.0, 102.0)]   # 2% dirtier
+    d = RT.route_interactive(500.0, snaps, sla_s=1.0,
+                             prev_rates={"b": 500.0}, hysteresis=0.05)
+    assert d.rate("b") == pytest.approx(500.0)   # stickiness wins the near-tie
+
+
+def test_router_overload_spreads_and_reports_overflow():
+    snaps = [_snap("a", 100.0, 500.0, 100.0), _snap("b", 100.0, 500.0, 200.0)]
+    d = RT.route_interactive(500.0, snaps, sla_s=1.0, max_rho=0.85)
+    assert d.overflow_rps > 0
+    assert sum(d.rates.values()) == pytest.approx(500.0)
+
+
+# =============================================================================
+# controller predictive trigger
+# =============================================================================
+class _RampForecaster:
+    def __init__(self, ci_future):
+        self.ci_future = ci_future
+
+    def predict(self, t, horizon_s):
+        return self.ci_future
+
+
+def test_predictive_trigger_fires_before_reactive():
+    ctx, _ = SIM.make_context("efficientnet", SIM.SimConfig(n_blocks=1))
+    fc = _RampForecaster(300.0)
+    c = CTRL.Controller(SCH.make_scheme("CLOVER"), ctx, forecaster=fc)
+    c.start(0.0, 300.0)
+    assert not c.should_reoptimize(300.0, t=0.0)   # flat obs + flat forecast
+    fc.ci_future = 400.0       # forecast swings; observation still flat
+    assert c.should_reoptimize(300.0, t=60.0)
+    cfg, outcome = c.maybe_reoptimize(60.0, 300.0)
+    inv = c.invocations[-1]
+    assert inv.predictive
+    # optimized against the blend of current and forecast CI
+    assert 300.0 < inv.ci < 400.0
+
+
+def test_predictive_trigger_no_ping_pong():
+    """After a predictive re-optimization, a *stable* observation/forecast
+    pair must not re-trip the trigger: storing the blend while triggering on
+    raw observed CI would alternate predictive/reactive invocations every
+    window for as long as forecast and observation disagree."""
+    ctx, _ = SIM.make_context("efficientnet", SIM.SimConfig(n_blocks=1))
+    c = CTRL.Controller(SCH.make_scheme("CLOVER"), ctx,
+                        forecaster=_RampForecaster(400.0))
+    c.start(0.0, 300.0)
+    c.maybe_reoptimize(60.0, 300.0)          # predictive invocation
+    n = len(c.invocations)
+    for k in range(10):                      # flat obs + flat forecast
+        c.maybe_reoptimize(120.0 + 60.0 * k, 300.0)
+    assert len(c.invocations) == n
+
+
+def test_predictive_trigger_silent_without_forecaster():
+    ctx, _ = SIM.make_context("efficientnet", SIM.SimConfig(n_blocks=1))
+    c = CTRL.Controller(SCH.make_scheme("CLOVER"), ctx)
+    c.start(0.0, 300.0)
+    assert not c.should_reoptimize(302.0, t=0.0)
+
+
+# =============================================================================
+# fleet simulation (smoke: short horizon; acceptance: slow)
+# =============================================================================
+def _short_traces(hours=30.0, seed=7):
+    return {r: CB.make_trace(r, hours=hours, seed=seed) for r in REGIONS}
+
+
+def test_fleet_smoke_serves_and_meets_deadlines():
+    traces = _short_traces()
+    cfg = FS.FleetConfig(warmup_s=24 * 3600.0, n_jobs=4,
+                         min_slack_s=2 * 3600.0, max_slack_s=4 * 3600.0,
+                         plan_horizon_s=6 * 3600.0)
+    rep = FS.run_fleet("efficientnet", traces, cfg)
+    assert rep.served_interactive > 0
+    assert rep.served_deferrable > 0
+    # all interactive demand served (no residual backlog beyond one window)
+    total_int = sum(r.served_interactive for r in rep.regions.values())
+    assert total_int == pytest.approx(rep.served_interactive)
+    assert rep.p95_s <= rep.sla_target_s
+    assert not rep.deadline_misses
+    assert rep.overflow_req == 0.0
+
+
+def test_fleet_suspends_unused_regions():
+    traces = _short_traces()
+    cfg = FS.FleetConfig(warmup_s=24 * 3600.0, n_jobs=2,
+                         min_slack_s=2 * 3600.0, max_slack_s=4 * 3600.0,
+                         plan_horizon_s=6 * 3600.0)
+    rep = FS.run_fleet("efficientnet", traces, cfg)
+    # the dirtiest region should spend most of the short window suspended —
+    # an always-on 1-block region would burn ~1.2 kg over these 6 h
+    assert min(r.carbon_g for r in rep.regions.values()) < 1000.0
+
+
+@pytest.mark.slow
+def test_fleet_beats_best_single_region_48h():
+    """ISSUE 1 acceptance: on the three bundled regions over 48 h, fleet
+    {forecast + shifting + routing} beats the best single-region CLOVER on
+    carbon/request with p95 within SLA and all deadlines met."""
+    traces = {r: CB.make_trace(r, hours=72.0) for r in REGIONS}
+    cfg = FS.FleetConfig(warmup_s=24 * 3600.0)
+    out = FS.compare_fleet_vs_single("efficientnet", traces, cfg)
+    fleet, singles = out["fleet"], out["singles"]
+    best = singles[out["best_single"]]
+    assert fleet.carbon_per_req_g() < best.carbon_per_req_g()
+    assert fleet.p95_s <= fleet.sla_target_s
+    assert not fleet.deadline_misses
+
+
+@pytest.mark.slow
+def test_fleet_ablation_ordering_48h():
+    """Routing and elastic scaling are the load-bearing levers: removing
+    either must cost carbon vs the full fleet."""
+    traces = {r: CB.make_trace(r, hours=72.0) for r in REGIONS}
+    base = FS.run_fleet("efficientnet", traces,
+                        FS.FleetConfig(warmup_s=24 * 3600.0))
+    no_route = FS.run_fleet("efficientnet", traces,
+                            FS.FleetConfig(warmup_s=24 * 3600.0,
+                                           routing_on=False))
+    no_elastic = FS.run_fleet("efficientnet", traces,
+                              FS.FleetConfig(warmup_s=24 * 3600.0,
+                                             elastic=False))
+    assert base.carbon_per_req_g() < no_route.carbon_per_req_g()
+    assert base.carbon_per_req_g() < no_elastic.carbon_per_req_g()
