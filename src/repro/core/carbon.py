@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -100,10 +100,79 @@ def make_trace(region: str = "CISO-March", hours: float = 48.0,
     return CarbonTrace(region, t, ci)
 
 
-def load_trace_csv(path: str, name: Optional[str] = None) -> CarbonTrace:
-    """CSV with columns: seconds,gco2_per_kwh."""
-    data = np.loadtxt(path, delimiter=",", skiprows=1)
-    return CarbonTrace(name or path, data[:, 0], data[:, 1])
+_TIME_COL_HINTS = ("datetime", "timestamp", "date", "time", "seconds")
+_CI_COL_HINTS = ("carbon_intensity", "carbon intensity", "gco2", "co2",
+                 "intensity")
+
+
+def _parse_time_s(value: str) -> Tuple[float, bool]:
+    """(seconds, was_datetime) from a CSV cell: plain numbers pass through;
+    ISO-8601 timestamps (ElectricityMaps exports, with or without a trailing
+    Z) become epoch seconds.  Naive stamps are taken as UTC — resolving them
+    in the host's local timezone would make the same file load differently
+    per machine and corrupt spacing across DST transitions."""
+    try:
+        return float(value), False
+    except ValueError:
+        pass
+    import datetime as _dt
+    v = value.strip().replace("Z", "+00:00")
+    dt = _dt.datetime.fromisoformat(v)
+    if dt.tzinfo is None:
+        dt = dt.replace(tzinfo=_dt.timezone.utc)
+    return dt.timestamp(), True
+
+
+def load_trace_csv(path: str, name: Optional[str] = None,
+                   time_col: Optional[str] = None,
+                   ci_col: Optional[str] = None) -> CarbonTrace:
+    """Load a carbon-intensity trace from CSV.
+
+    Accepts both the repo's own ``seconds,gco2_per_kwh`` format and
+    ElectricityMaps-style exports: a timestamp column (ISO-8601 datetimes
+    *or* plain seconds — sniffed by header name, overridable via
+    ``time_col``) plus a gCO2/kWh column (any header containing "carbon
+    intensity"/"gco2"/…, overridable via ``ci_col``), with arbitrary extra
+    columns, irregular sample spacing and unsorted rows.  Datetime stamps
+    are rebased so the trace starts at t = 0; duplicate timestamps keep the
+    last sample."""
+    import csv
+
+    with open(path, newline="") as f:
+        rows = list(csv.DictReader(f))
+    if not rows:
+        raise ValueError(f"empty trace CSV {path}")
+    cols = list(rows[0].keys())
+
+    def find(requested: Optional[str], hints) -> str:
+        if requested is not None:
+            if requested not in cols:
+                raise KeyError(f"column {requested!r} not in {cols}")
+            return requested
+        for hint in hints:
+            for c in cols:
+                if c is not None and hint in c.strip().lower():
+                    return c
+        raise KeyError(f"no column matching {hints} in {cols}")
+
+    tc = find(time_col, _TIME_COL_HINTS)
+    cc = find(ci_col, _CI_COL_HINTS)
+    samples = {}
+    any_datetime = False
+    for row in rows:
+        t_raw, ci_raw = row.get(tc), row.get(cc)
+        if not t_raw or not t_raw.strip() or not ci_raw or not ci_raw.strip():
+            continue                    # gaps in real exports: skip the row
+        t_s, was_dt = _parse_time_s(t_raw)
+        any_datetime |= was_dt
+        samples[t_s] = float(ci_raw)
+    if len(samples) < 2:
+        raise ValueError(f"{path}: fewer than 2 usable samples")
+    ts = np.array(sorted(samples))
+    ci = np.array([samples[t] for t in ts])
+    if any_datetime:
+        ts = ts - ts[0]                 # epoch stamps → trace-relative seconds
+    return CarbonTrace(name or path, ts, ci)
 
 
 # =============================================================================

@@ -18,7 +18,7 @@ late.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Protocol, Tuple
+from typing import Callable, List, Optional, Protocol, Tuple
 
 from repro.core import annealing as SA
 from repro.core import config_graph as CG
@@ -52,6 +52,16 @@ class Controller:
     last_opt_ci: Optional[float] = None        # observed CI at last invocation
     last_opt_hat: Optional[float] = None       # forecast CI at last invocation
     invocations: List[Invocation] = dataclasses.field(default_factory=list)
+    # serving-backend hook: called with the new graph whenever the active
+    # config changes (start / reoptimize / elastic scaling).  The real
+    # engine's warm ``configure`` attaches here, so a fleet loop drives live
+    # instances through the exact same path the simulator exercises.
+    on_config_change: Optional[Callable[[CG.ConfigGraph], None]] = None
+
+    def _notify(self, prev: Optional[CG.ConfigGraph]) -> None:
+        if self.on_config_change is not None and self.config is not None \
+                and (prev is None or prev.edges != self.config.edges):
+            self.on_config_change(self.config)
 
     def start(self, t: float, ci: float) -> CG.ConfigGraph:
         self.config = self.scheme.initial(self.ctx)
@@ -61,6 +71,7 @@ class Controller:
             self.last_opt_ci = ci
             self.last_opt_hat = (self.forecaster.predict(t, self.forecast_horizon_s)
                                  if self.forecaster is not None else ci)
+        self._notify(None)
         return self.config
 
     def _drifted(self, anchor: Optional[float], ci: float) -> bool:
@@ -99,11 +110,13 @@ class Controller:
         if predictive:
             b = self.forecast_blend
             ci_opt = (1.0 - b) * ci + b * ci_hat   # lead the trace
+        prev = self.config
         new_cfg, outcome = self.scheme.reoptimize(self.ctx, ci_opt, self.config)
         self.config = new_cfg
         self.last_opt_ci = ci
         self.last_opt_hat = ci_hat if ci_hat is not None else ci
         self.invocations.append(Invocation(t, ci_opt, outcome, new_cfg, predictive))
+        self._notify(prev)
         return new_cfg, outcome
 
     # --- elastic scaling (graph additivity, paper §4.2) -------------------------
@@ -141,5 +154,6 @@ class Controller:
             for _ in range(delta_blocks):
                 g = g.add(template)
         self.ctx.n_blocks += delta_blocks
-        self.config = g
+        prev, self.config = self.config, g
+        self._notify(prev)
         return g

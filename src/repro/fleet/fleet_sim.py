@@ -96,6 +96,18 @@ class FleetConfig:
     routing_on: bool = True
     shifting_on: bool = True
     predictive_on: bool = True
+    # serving backend: "fluid" = analytic window model (default);
+    # "real" = fluid bookkeeping + a per-region continuous-batching
+    # RealEngine reconfigured through Controller.maybe_reoptimize, probed
+    # with real requests every window (short-horizon acceptance runs)
+    backend: str = "fluid"
+    engine_arch: str = "qwen3-1.7b"
+    engine_layers: int = 2             # depth of the x1 engine variant
+    engine_slots: int = 2              # KV-cache slots per instance
+    engine_max_len: int = 32
+    probe_requests: int = 4            # real requests probed per window
+    probe_prompt_len: int = 6
+    probe_new_tokens: int = 4
 
     def resolved_max_blocks(self) -> int:
         return self.max_blocks if self.max_blocks is not None else 3 * self.n_blocks
@@ -117,6 +129,12 @@ class RegionReport:
     mean_ci: float
     released_plan: float = 0.0         # deferrable work sent here by the plan
     released_emergency: float = 0.0    # … by the deadline-emergency path
+    # real-execution backend stats (zero under the fluid backend)
+    real_p95_s: float = 0.0            # measured engine p95 over all probes
+    real_served: int = 0               # real requests actually executed
+    real_energy_j: float = 0.0         # measured (occupancy-scaled) energy
+    real_reconfig_s: float = 0.0       # total warm-reconfiguration seconds
+    real_reconfigs: int = 0
 
 
 @dataclasses.dataclass
@@ -133,6 +151,8 @@ class FleetReport:
     deadline_misses: List[str]
     overflow_req: float
     job_lateness_s: Dict[str, float] = dataclasses.field(default_factory=dict)
+    real_p95_s: float = 0.0            # fleet-wide measured engine p95
+    real_served: int = 0               # (real-execution backend only)
 
     @property
     def deadlines_met(self) -> bool:
@@ -150,7 +170,7 @@ class _Region:
     """Runtime state of one region's cluster."""
 
     def __init__(self, name: str, trace: CB.CarbonTrace, family: str,
-                 cfg: FleetConfig):
+                 cfg: FleetConfig, engine_family=None):
         simcfg = SIM.SimConfig(n_blocks=cfg.n_blocks, window_s=cfg.window_s,
                                target_rho=cfg.target_rho, lam=cfg.lam,
                                ci_threshold=cfg.ci_threshold, seed=cfg.seed,
@@ -158,7 +178,15 @@ class _Region:
         self.name = name
         self.trace = trace
         self.cfg = cfg
-        self.ctx, self.base_arrival = SIM.make_context(family, simcfg)
+        if engine_family is not None:
+            # the controller optimizes over the ENGINE ladder's variants, so
+            # its configs name real instances the engine can instantiate
+            variants = [ev.variant for ev in engine_family]
+            family = engine_family[0].variant.family
+            self.ctx, self.base_arrival = SIM.make_context(
+                family, simcfg, variants=variants)
+        else:
+            self.ctx, self.base_arrival = SIM.make_context(family, simcfg)
         self.forecaster = FC.make_forecaster(cfg.forecaster, trace)
         self.controller = CTRL.Controller(
             SCH.make_scheme(cfg.scheme), self.ctx,
@@ -166,8 +194,23 @@ class _Region:
             forecaster=self.forecaster if cfg.predictive_on else None,
             forecast_horizon_s=cfg.forecast_horizon_s)
         self.acct = CB.CarbonAccountant(trace)
-        self.server = SIM.FluidServer(self.ctx.variants, self.acct,
-                                      self.ctx.obj_cfg.l_tail_s)
+        if engine_family is not None:
+            # lazy imports: the fluid path must not depend on jax
+            from repro.serving import backends as BK
+            from repro.serving import engine as ENG
+            eng = ENG.RealEngine(engine_family, n_slots=cfg.engine_slots,
+                                 max_len=cfg.engine_max_len)
+            self.server = BK.RealWindowServer(
+                self.ctx.variants, self.acct, self.ctx.obj_cfg.l_tail_s,
+                engine=eng, probe_requests=cfg.probe_requests,
+                prompt_len=cfg.probe_prompt_len, n_new=cfg.probe_new_tokens,
+                seed=cfg.seed)
+            # reconfigurations flow through Controller.maybe_reoptimize /
+            # scale_blocks straight into the engine's warm configure
+            self.controller.on_config_change = self.server.apply_config
+        else:
+            self.server = SIM.FluidServer(self.ctx.variants, self.acct,
+                                          self.ctx.obj_cfg.l_tail_s)
         self.queue: List[List] = []    # [deadline, job_id, work] — EDF heap-ish
         self.int_rate = self.base_arrival
         self.last_scale_t = -math.inf
@@ -292,6 +335,11 @@ class _Region:
         if remaining > 1e-9:
             self.server.serve_segment(ctrl.config, start, remaining, int_rate,
                                       defer_rps, net_delay_s)
+        # real-execution backend: drive this window's active config through
+        # the region's engine and measure a probe batch
+        probe = getattr(self.server, "probe_window", None)
+        if probe is not None:
+            probe(ctrl.config)
 
     def rescale(self, t: float, need_rps: float, cfg: FleetConfig) -> None:
         """Size the block count so the assigned load lands near ``scale_rho``
@@ -429,7 +477,16 @@ def _plan_slots(regions: Sequence[_Region], t: float, horizon_end: float,
 
 def run_fleet(family: str, traces: Dict[str, CB.CarbonTrace],
               cfg: FleetConfig = FleetConfig()) -> FleetReport:
-    regions = [_Region(name, tr, family, cfg) for name, tr in traces.items()]
+    engine_family = None
+    if cfg.backend == "real":
+        # one ladder for the whole fleet: regions share weights and jitted
+        # functions (per-region isolation lives in each engine's Instance
+        # slot caches, not the parameters)
+        from repro.serving import backends as BK
+        engine_family = BK.build_real_family(
+            cfg.engine_arch, cfg.engine_layers, seed=cfg.seed)
+    regions = [_Region(name, tr, family, cfg, engine_family)
+               for name, tr in traces.items()]
     by_name = {r.name: r for r in regions}
     duration = min(tr.duration_s for tr in traces.values())
     t_start = cfg.warmup_s        # traces before t_start are history only
@@ -607,7 +664,12 @@ def run_fleet(family: str, traces: Dict[str, CB.CarbonTrace],
             n_predictive=sum(i.predictive for i in r.controller.invocations),
             final_blocks=r.ctx.n_blocks, mean_ci=r.trace.mean(),
             released_plan=released_plan[r.name],
-            released_emergency=released_emergency[r.name])
+            released_emergency=released_emergency[r.name],
+            real_p95_s=getattr(r.server, "real_p95", lambda: 0.0)(),
+            real_served=getattr(r.server, "real_served", 0),
+            real_energy_j=getattr(r.server, "real_energy_j", 0.0),
+            real_reconfig_s=getattr(r.server, "reconfig_s_total", 0.0),
+            real_reconfigs=getattr(r.server, "n_reconfigs", 0))
     return FleetReport(
         regions=region_reports,
         carbon_g=sum(r.acct.carbon_g for r in regions),
@@ -623,7 +685,12 @@ def run_fleet(family: str, traces: Dict[str, CB.CarbonTrace],
         jobs_total=len(workload.jobs), deadline_misses=misses,
         overflow_req=overflow_req,
         job_lateness_s={j.job_id: done_t.get(j.job_id, math.inf)
-                        - j.deadline_s for j in workload.jobs})
+                        - j.deadline_s for j in workload.jobs},
+        real_p95_s=SIM.weighted_p95(
+            [(l, 1.0) for r in regions
+             for l in getattr(r.server, "real_latencies", [])]),
+        real_served=sum(getattr(r.server, "real_served", 0)
+                        for r in regions))
 
 
 def single_region_baseline(family: str, trace: CB.CarbonTrace,

@@ -205,10 +205,31 @@ def backtest_table(trace: CarbonTrace,
                    horizons_s: Sequence[float] = (1800.0, 3600.0, 6 * 3600.0,
                                                   12 * 3600.0),
                    names: Sequence[str] = ("persistence", "harmonic"),
+                   t_start: float = 12 * 3600.0,
                    ) -> Dict[str, Dict[float, BacktestReport]]:
     """Error matrix forecaster × horizon for one region's trace."""
     out: Dict[str, Dict[float, BacktestReport]] = {}
     for name in names:
         f = make_forecaster(name, trace)
-        out[name] = {h: backtest(f, h) for h in horizons_s}
+        out[name] = {h: backtest(f, h, t_start=t_start) for h in horizons_s}
     return out
+
+
+def backtest_csv(path: str, name: Optional[str] = None,
+                 horizons_s: Sequence[float] = (1800.0, 3600.0, 6 * 3600.0),
+                 names: Sequence[str] = ("persistence", "harmonic",
+                                         "ensemble"),
+                 t_start: Optional[float] = None,
+                 ) -> Dict[str, Dict[float, BacktestReport]]:
+    """Backtest forecasters on a REAL carbon-intensity trace loaded from an
+    ElectricityMaps-style CSV (``carbon.load_trace_csv``) — the data-driven
+    way to pick a region's forecaster instead of trusting the synthetic
+    generators.  ``t_start`` defaults to a quarter of the trace so
+    history-hungry forecasters are past their cold start even on short
+    exports."""
+    from repro.core.carbon import load_trace_csv
+    trace = load_trace_csv(path, name=name)
+    if t_start is None:
+        t_start = 0.25 * trace.duration_s
+    return backtest_table(trace, horizons_s=horizons_s, names=names,
+                          t_start=t_start)

@@ -1,0 +1,5 @@
+"""Version shims for the Pallas TPU API, shared by every kernel module."""
+from jax.experimental.pallas import tpu as pltpu
+
+# jax<0.5 renamed: TPUCompilerParams -> CompilerParams (jax 0.5+)
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -27,7 +29,7 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
                    *, sm_scale: float, block_k: int):
     kb = pl.program_id(2)
     nkb = pl.num_programs(2)
-    length = len_ref[0]
+    length = len_ref[pl.program_id(0)]       # per-row valid prefix (SMEM)
 
     @pl.when(kb == 0)
     def _init():
@@ -63,7 +65,8 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
 def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                      length, *, block_k: int = 256,
                      interpret: bool = True) -> jnp.ndarray:
-    """q: (b, H, dh); caches: (b, S, K, dh); length: () or python int.
+    """q: (b, H, dh); caches: (b, S, K, dh); length: () / python int shared
+    across rows, or (b,) per-row valid prefixes (slotted batched decode).
     Returns (b, H, dh)."""
     b, H, dh = q.shape
     S, K = k_cache.shape[1], k_cache.shape[2]
@@ -75,7 +78,8 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
     qr = q.reshape(b, K, g, dh)
     kr = k_cache.transpose(0, 2, 1, 3)               # (b, K, S, dh)
     vr = v_cache.transpose(0, 2, 1, 3)
-    length_arr = jnp.asarray(length, jnp.int32).reshape(1)
+    length_arr = jnp.broadcast_to(
+        jnp.asarray(length, jnp.int32).reshape(-1), (b,))
 
     out = pl.pallas_call(
         functools.partial(_decode_kernel, sm_scale=dh ** -0.5, block_k=block_k),
@@ -93,7 +97,7 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
             pltpu.VMEM((g, 1), jnp.float32),
             pltpu.VMEM((g, dh), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(length_arr, qr, kr, vr)

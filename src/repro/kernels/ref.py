@@ -38,14 +38,15 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
                          v_cache: jnp.ndarray, length) -> jnp.ndarray:
     """One-position attention over a KV cache.  q: (b, H, dh);
-    caches: (b, S, K, dh); length: () valid prefix."""
+    caches: (b, S, K, dh); length: () shared valid prefix, or (b,) per-row
+    valid prefixes (slotted continuous-batching decode)."""
     b, H, dh = q.shape
     S, K = k_cache.shape[1], k_cache.shape[2]
     g = H // K
     qg = q.reshape(b, K, g, dh)
     s = jnp.einsum("bkgd,bnkd->bkgn", qg.astype(jnp.float32),
                    k_cache.astype(jnp.float32)) * dh ** -0.5
-    mask = jnp.arange(S)[None, :] < length
+    mask = jnp.arange(S)[None, :] < jnp.asarray(length).reshape(-1, 1)
     s = jnp.where(mask[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgn,bnkd->bkgd", p, v_cache.astype(jnp.float32))

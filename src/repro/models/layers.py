@@ -208,9 +208,12 @@ def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndar
                          length: jnp.ndarray, *, window=None) -> jnp.ndarray:
     """Single-position attention against a KV cache.
 
-    q: (b, 1, H, dh); caches: (b, S, K, dh); length: () current valid length
-    (the new token's position is length - 1).  ``window`` as in
-    :func:`blocked_attention`.  Returns (b, 1, H, dh).
+    q: (b, 1, H, dh); caches: (b, S, K, dh); length: () shared valid length,
+    or (b,) per-row valid lengths — the slotted continuous-batching decode,
+    same masking contract as ``kernels.decode_attention`` with
+    ``kernels.ref`` as the CPU oracle.  The new token's position is
+    length - 1 (per row).  ``window`` as in :func:`blocked_attention`.
+    Returns (b, 1, H, dh).
     """
     b, _, H, dh = q.shape
     S, K = k_cache.shape[1], k_cache.shape[2]
@@ -219,12 +222,13 @@ def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndar
     qg = q.reshape(b, K, g, dh)
     s = jnp.einsum("bkgd,bnkd->bkgn", (qg * scale).astype(k_cache.dtype),
                    k_cache, preferred_element_type=jnp.float32)
-    pos = jnp.arange(S)
-    mask = pos[None, :] < length
+    pos = jnp.arange(S)[None, :]
+    ln = jnp.asarray(length).reshape(-1, 1)     # () -> (1,1); (b,) -> (b,1)
+    mask = pos < ln
     if window is not None:
         eff = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window, jnp.int32),
                         jnp.int32(2**30))
-        mask &= pos[None, :] > (length - 1 - eff)
+        mask &= pos > (ln - 1 - eff)
     s = jnp.where(mask[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgn,bnkd->bkgd", p.astype(v_cache.dtype), v_cache,
@@ -244,6 +248,38 @@ def attention_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig, cos, sin,
     o = blocked_attention(q, k, v, causal=causal, window=window)
     b, s = x.shape[:2]
     return dense_apply(p["wo"], o.reshape(b, s, cfg.n_heads * cfg.d_head))
+
+
+def attention_prefill_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                            cos, sin, *, causal: bool = True, window=None
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence attention that also returns the rotated K/V so a prefill
+    pass can populate a decode cache in one forward (no teacher-forcing
+    replay).  Returns (out (b,s,d), k (b,s,K,dh), v (b,s,K,dh))."""
+    q, k, v = _project_qkv(p, x, cfg, cos, sin)
+    o = blocked_attention(q, k, v, causal=causal, window=window)
+    b, s = x.shape[:2]
+    return dense_apply(p["wo"], o.reshape(b, s, cfg.n_heads * cfg.d_head)), k, v
+
+
+def attention_decode_slots_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                                 cos, sin, cache_k: jnp.ndarray,
+                                 cache_v: jnp.ndarray, lengths: jnp.ndarray,
+                                 *, window=None):
+    """One continuous-batching decode step: each row scatters its new K/V at
+    its own position ``lengths[i]`` and attends over its own valid prefix.
+    x: (b, 1, d); caches (b, S, K, dh); lengths (b,) i32.
+    Returns (out (b,1,d), new_cache_k, new_cache_v)."""
+    q, k, v = _project_qkv(p, x, cfg, cos, sin)
+    b = x.shape[0]
+    rows = jnp.arange(b)
+    cache_k = cache_k.at[rows, lengths].set(k[:, 0].astype(cache_k.dtype),
+                                            mode="drop")
+    cache_v = cache_v.at[rows, lengths].set(v[:, 0].astype(cache_v.dtype),
+                                            mode="drop")
+    o = decode_attention_ref(q, cache_k, cache_v, lengths + 1, window=window)
+    out = dense_apply(p["wo"], o.reshape(b, 1, cfg.n_heads * cfg.d_head))
+    return out, cache_k, cache_v
 
 
 def cross_kv(p: Params, memory: jnp.ndarray, cfg: ModelConfig):

@@ -61,3 +61,28 @@ def decode_step(params: Params, cache: Params, batch: dict,
         return ED.decode_step_encdec(params, cache, batch["tokens"], cfg)
     return T.decode_step_lm(params, cache, batch["tokens"], cfg,
                             mrope_positions=batch.get("mrope_positions"))
+
+
+# --- slotted continuous-batching decode (serving engine) ----------------------
+def supports_slots(cfg: ModelConfig) -> bool:
+    """True when the family can serve through the slotted batched KV cache."""
+    return cfg.n_enc_layers == 0 and T.supports_slots(cfg)
+
+
+def make_slot_cache(cfg: ModelConfig, n_slots: int, max_len: int,
+                    dtype=jnp.bfloat16) -> Params:
+    """Fixed-capacity batched KV cache with a per-slot ``lengths`` vector."""
+    return T.init_slot_cache(cfg, n_slots, max_len, dtype)
+
+
+def prefill_kv(params: Params, batch: dict, cfg: ModelConfig
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-pass prefill -> (logits (b, s, V), k (L, b, s, K, dh), v) so the
+    engine populates slot caches without token-by-token prompt replay."""
+    return T.prefill_kv_lm(params, batch["tokens"], cfg)
+
+
+def decode_slots(params: Params, cache: Params, batch: dict, cfg: ModelConfig,
+                 active: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    """Batched decode over all slots -> (logits (n_slots, V), new_cache)."""
+    return T.decode_slots_lm(params, cache, batch["tokens"], cfg, active)

@@ -376,6 +376,121 @@ def decode_step_lm(params: Params, cache: Params, tokens: jnp.ndarray,
 
 
 # =============================================================================
+# slotted continuous-batching decode (serving engine)
+# =============================================================================
+def supports_slots(cfg: ModelConfig) -> bool:
+    """Families the slotted batched KV cache covers: pure-attention decoders
+    (dense / MoE) with a classic DUS cache — no encoder, no SSM state, no
+    per-stream M-RoPE positions."""
+    return (cfg.family in ("dense", "moe") and cfg.n_enc_layers == 0
+            and not cfg.mrope_sections)
+
+
+def init_slot_cache(cfg: ModelConfig, n_slots: int, max_len: int,
+                    dtype=jnp.bfloat16) -> Params:
+    """Fixed-capacity batched KV cache: ``n_slots`` independent sequences,
+    each with its own valid-prefix ``lengths[i]`` (the continuous-batching
+    analogue of ``init_kv_cache``'s single scalar ``pos``)."""
+    assert supports_slots(cfg), f"slotted cache unsupported for {cfg.family}"
+    K, dh = cfg.n_kv_heads, cfg.d_head
+    return {
+        "k": jnp.zeros((cfg.n_layers, n_slots, max_len, K, dh), dtype),
+        "v": jnp.zeros((cfg.n_layers, n_slots, max_len, K, dh), dtype),
+        "lengths": jnp.zeros((n_slots,), jnp.int32),
+    }
+
+
+def prefill_kv_lm(params: Params, tokens: jnp.ndarray, cfg: ModelConfig
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward that also emits every layer's rotated K/V, so a
+    serving engine populates a decode cache in ONE pass instead of replaying
+    the prompt token-by-token through ``decode_step_lm``.
+
+    tokens: (b, s) i32 -> (logits (b, s, V), k (L, b, s, K, dh), v (...))."""
+    assert supports_slots(cfg), f"prefill-kv unsupported for {cfg.family}"
+    b, s = tokens.shape
+    x = L.embedding_apply(params["embed"], tokens)
+    positions = jnp.arange(s, dtype=jnp.int32)
+    (cos_l, sin_l), (cos_g, sin_g) = _rope_tables(cfg, positions)
+    windows_np, is_global_np = layer_pattern(cfg)
+    windows = jnp.asarray(windows_np)
+    is_global = jnp.asarray(is_global_np)
+    has_win = _has_window(cfg)
+
+    def body(x, xs):
+        p, win, isg = xs
+        cos = jnp.where(isg, cos_g, cos_l)
+        sin = jnp.where(isg, sin_g, sin_l)
+        h = L.rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+        a_out, k, v = L.attention_prefill_apply(
+            p["attn"], h, cfg, cos, sin, causal=True,
+            window=win if has_win else None)
+        x = x + a_out
+        h = L.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+        if cfg.is_moe:
+            y, _ = M.moe_apply(p["moe"], h, cfg)
+        else:
+            y = L.mlp_apply(p["mlp"], h, cfg)
+        return x + y, (k, v)
+
+    x, (k_all, v_all) = jax.lax.scan(body, x,
+                                     (params["layers"], windows, is_global))
+    x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.embedding_logits(params["embed"], x)
+    else:
+        logits = L.dense_apply(params["lm_head"], x)
+    return logits, k_all, v_all
+
+
+def decode_slots_lm(params: Params, cache: Params, tokens: jnp.ndarray,
+                    cfg: ModelConfig, active: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, Params]:
+    """One batched decode step over ALL slots of a slot cache.
+
+    tokens: (n_slots, 1) i32 — one column across slots; ``active``:
+    (n_slots,) bool — slots currently serving a request.  Free slots still
+    compute (the batch shape is static for jit) but their cache writes land
+    on positions a future admission's prefill overwrites, and their lengths
+    do not advance.  Returns (logits (n_slots, V), new_cache)."""
+    lengths = cache["lengths"]
+    x = L.embedding_apply(params["embed"], tokens)
+    positions = lengths[:, None]               # (n_slots, 1) per-slot position
+    (cos_l, sin_l), (cos_g, sin_g) = _rope_tables(cfg, positions)
+    windows_np, is_global_np = layer_pattern(cfg)
+    windows = jnp.asarray(windows_np)
+    is_global = jnp.asarray(is_global_np)
+    has_win = _has_window(cfg)
+
+    def body(x, xs):
+        p, kc, vc, win, isg = xs
+        cos = jnp.where(isg, cos_g, cos_l)
+        sin = jnp.where(isg, sin_g, sin_l)
+        h = L.rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+        a, kc2, vc2 = L.attention_decode_slots_apply(
+            p["attn"], h, cfg, cos, sin, kc, vc, lengths,
+            window=win if has_win else None)
+        x = x + a
+        h = L.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+        if cfg.is_moe:
+            y, _ = M.moe_apply(p["moe"], h, cfg)
+        else:
+            y = L.mlp_apply(p["mlp"], h, cfg)
+        return x + y, (kc2, vc2)
+
+    x, (k2, v2) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                         cache["v"], windows, is_global))
+    x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.embedding_logits(params["embed"], x)
+    else:
+        logits = L.dense_apply(params["lm_head"], x)
+    new_cache = {"k": k2, "v": v2,
+                 "lengths": lengths + active.astype(jnp.int32)}
+    return logits[:, 0, :], new_cache
+
+
+# =============================================================================
 # VLM helper — merge precomputed patch embeddings into the token stream
 # =============================================================================
 def merge_patch_embeds(token_embeds: jnp.ndarray, patch_embeds: jnp.ndarray,

@@ -1,0 +1,106 @@
+"""Pluggable per-region serving backends for the fleet simulator.
+
+The fleet loop (``repro.fleet.fleet_sim``) does its routing / shifting /
+elastic-scaling arithmetic against the analytic fluid-window model — at 48 h
+and production rates that is the only tractable choice.  What was missing is
+an execution-grounded variant: this module lets a region serve through the
+REAL continuous-batching engine (``serving.engine.RealEngine``) so a
+short-horizon acceptance run validates the whole control loop — controller
+re-optimization, warm reconfiguration, slot-level continuous batching,
+measured latencies and energy — against actual JAX execution instead of the
+fluid model alone.
+
+``RealWindowServer`` keeps the FluidServer bookkeeping (capacity, backlog,
+SLA windows) and adds, per serving window:
+
+  * the controller's active config is applied to the region's engine via the
+    warm ``configure`` path (attached to ``Controller.on_config_change``, so
+    reconfigurations flow through ``Controller.maybe_reoptimize`` exactly as
+    on a pod);
+  * a probe batch of real requests runs through the slotted engine,
+    recording measured wall latencies, tokens and occupancy-scaled energy.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import carbon as CB
+from repro.core import config_graph as CG
+from repro.core.catalog import Variant
+from repro.serving import simulator as SIM
+from repro.serving.scheduler import latency_percentile
+
+
+def build_real_family(arch: str = "qwen3-1.7b", n_layers: int = 4,
+                      fracs=(1.0, 0.5, 0.25), seed: int = 0):
+    """Reduced-depth engine ladder for fleet acceptance runs (lazy jax
+    import: the fluid fleet path must stay importable without touching jax)."""
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.serving import engine as ENG
+
+    base = get_smoke_config(arch).with_(n_layers=n_layers, dtype=jnp.float32)
+    return ENG.build_engine_family(base, fracs=fracs, seed=seed)
+
+
+class RealWindowServer(SIM.FluidServer):
+    """FluidServer bookkeeping + a real continuous-batching engine in the
+    serving loop (see module docstring)."""
+
+    def __init__(self, variants: Sequence[Variant], acct: CB.CarbonAccountant,
+                 sla_target_s: float, *, engine, probe_requests: int = 4,
+                 prompt_len: int = 6, n_new: int = 4, seed: int = 0,
+                 sla_slack: float = 1.001):
+        super().__init__(variants, acct, sla_target_s, sla_slack)
+        self.engine = engine
+        self.probe_requests = probe_requests
+        self.prompt_len = prompt_len
+        self.n_new = n_new
+        self._rng = np.random.default_rng(seed)
+        self._vocab = next(iter(engine.family.values())).cfg.vocab_size
+        self._configured_edges = None
+        # measured, real-execution stats
+        self.real_latencies: List[float] = []
+        self.real_served = 0
+        self.real_tokens = 0
+        self.real_energy_j = 0.0
+        self.real_occupancy: List[float] = []
+        self.reconfig_s_total = 0.0
+        self.n_reconfigs = 0
+
+    # --- controller hook -----------------------------------------------------
+    def apply_config(self, g: CG.ConfigGraph) -> None:
+        """Warm-reconfigure the engine to the controller's active graph.
+        Suspended regions (0 chips) simply drop all instances."""
+        if self._configured_edges == g.edges:
+            return
+        self.reconfig_s_total += self.engine.configure(g)
+        self.n_reconfigs += 1
+        self._configured_edges = g.edges
+
+    # --- real probe ----------------------------------------------------------
+    def probe_window(self, g: CG.ConfigGraph) -> Optional[Dict[str, float]]:
+        """Serve a probe batch of real requests under the active config and
+        record measured latency/energy.  Returns the engine metrics (None
+        for a suspended region)."""
+        if g.total_chips == 0:
+            return None
+        self.apply_config(g)
+        prompts = [self._rng.integers(0, self._vocab,
+                                      size=(1, self.prompt_len)
+                                      ).astype(np.int32)
+                   for _ in range(self.probe_requests)]
+        m = self.engine.serve(prompts, n_new=self.n_new)
+        self.real_latencies.extend(self.engine.last_latencies)
+        self.real_served += int(m["served"])
+        self.real_tokens += int(m["tokens"])
+        self.real_energy_j += m["energy_j"]
+        self.real_occupancy.append(m["mean_occupancy"])
+        return m
+
+    def real_p95(self) -> float:
+        return (latency_percentile(self.real_latencies, 95.0)
+                if self.real_latencies else 0.0)

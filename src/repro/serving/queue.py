@@ -14,7 +14,9 @@ tolerance):
 
 Used by tests (validates the fluid simulator on short horizons), by
 benchmarks for short-span exact replays, and by the real-execution engine
-(which substitutes measured service times).
+(which substitutes measured service times).  The FIFO admission machinery
+(done-skipping queue, first-completion-wins, hedge/requeue counters) lives
+in ``serving.scheduler.SchedulerCore``, shared with the real engine.
 """
 from __future__ import annotations
 
@@ -22,11 +24,12 @@ import dataclasses
 import heapq
 import math
 import random
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 from repro.core import config_graph as CG
 from repro.core import perf_model as PM
 from repro.core.catalog import Variant
+from repro.serving.scheduler import SchedulerCore, latency_percentile
 
 
 @dataclasses.dataclass
@@ -51,11 +54,17 @@ class DESResult:
     failures: int
     requeues: int
 
+    def _pct(self, q: float) -> float:
+        return latency_percentile(self.latencies, q) if self.latencies else 0.0
+
+    def p50(self) -> float:
+        return self._pct(50.0)
+
     def p95(self) -> float:
-        if not self.latencies:
-            return 0.0
-        s = sorted(self.latencies)
-        return s[min(int(0.95 * len(s)), len(s) - 1)]
+        return self._pct(95.0)
+
+    def p99(self) -> float:
+        return self._pct(99.0)
 
     def mean_accuracy(self) -> float:
         return self.accuracy_weighted / max(self.served, 1)
@@ -113,22 +122,19 @@ def run_des(g: CG.ConfigGraph, variants: Sequence[Variant],
         if des.fail_rate_per_instance_hz > 0:
             push(rng.expovariate(des.fail_rate_per_instance_hz), FAIL, (inst.idx,))
 
-    queue: List[Tuple[int, float]] = []          # (req id, arrival time)
+    core = SchedulerCore()
     req_id = 0
-    done: Dict[int, bool] = {}
-    latencies: List[float] = []
-    acc_w = 0.0
     energy = 0.0
-    hedges = failures = requeues = 0
+    failures = 0
 
     def dispatch(now: float):
         nonlocal energy
         free = [i for i in instances if i.alive and not i.busy]
-        while queue and free:
-            inst = free.pop(0)
-            rid, t_arr = queue.pop(0)
-            if done.get(rid):
-                continue
+        for inst in free:
+            nxt = core.pop_next()
+            if nxt is None:
+                break
+            rid, t_arr = nxt
             svc = sample_service(inst)
             inst.busy = True
             inst.busy_until = now + svc
@@ -144,7 +150,7 @@ def run_des(g: CG.ConfigGraph, variants: Sequence[Variant],
         if now > horizon_s:
             break
         if kind == ARRIVE:
-            queue.append((req_id, now))
+            core.submit(req_id, now)
             req_id += 1
             push(now + rng.expovariate(arrival_rps), ARRIVE, ())
             dispatch(now)
@@ -154,17 +160,13 @@ def run_des(g: CG.ConfigGraph, variants: Sequence[Variant],
             if inst.current and inst.current[0] == rid and inst.alive:
                 inst.busy = False
                 inst.current = None
-                if not done.get(rid):
-                    done[rid] = True
-                    latencies.append(now - t_arr)
-                    acc_w += inst.variant.accuracy
+                core.complete(rid, t_arr, now, inst.variant.accuracy)
                 dispatch(now)
         elif kind == HEDGE_CHECK:
             idx, rid, t_arr = payload
-            if not done.get(rid) and instances[idx].current \
+            if not core.done.get(rid) and instances[idx].current \
                     and instances[idx].current[0] == rid:
-                hedges += 1
-                queue.insert(0, (rid, t_arr))    # duplicate at head of queue
+                core.hedge_front(rid, t_arr)     # duplicate at head of queue
                 dispatch(now)
         elif kind == FAIL:
             (idx,) = payload
@@ -174,9 +176,8 @@ def run_des(g: CG.ConfigGraph, variants: Sequence[Variant],
                 failures += 1
                 if inst.current is not None:     # re-queue in-flight work
                     rid, t_arr = inst.current
-                    if not done.get(rid):
-                        queue.insert(0, (rid, t_arr))
-                        requeues += 1
+                    if not core.done.get(rid):
+                        core.requeue_front(rid, t_arr)
                     inst.current = None
                     inst.busy = False
                 push(now + des.repair_time_s, REPAIR, (idx,))
@@ -194,5 +195,5 @@ def run_des(g: CG.ConfigGraph, variants: Sequence[Variant],
     idle_chip_s = max(g.total_chips * horizon_s - busy_chip_s, 0.0)
     energy = busy_j + idle_chip_s * PM.P_IDLE_W
 
-    return DESResult(latencies, acc_w, len(latencies), energy,
-                     hedges, failures, requeues)
+    return DESResult(core.latencies, core.acc_weighted, core.served, energy,
+                     core.hedges, failures, core.requeues)

@@ -1,0 +1,104 @@
+"""Shared scheduler core for the serving layer (paper §4.3 load balancer).
+
+Both serving paths need the same admission machinery and used to duplicate
+it: the analytic DES (``serving.queue.run_des``) and the real-execution
+continuous-batching engine (``serving.engine.RealEngine``).  This module is
+the single implementation both build on:
+
+  * a FIFO admission queue with lazy completion skipping (a hedged or
+    re-queued request may already be done by the time it reaches the head);
+  * first-completion-wins bookkeeping (hedges dispatch duplicates; only the
+    first finish records a latency and an accuracy credit);
+  * hedge / fail-repair requeue counters;
+  * nearest-rank latency percentiles (the correct rank rounding — p50 of
+    [1, 2, 3, 4] is 2, and p95 never indexes past the end of the sample).
+
+The DES drives it from a simulated-time event heap; the real engine drives
+it from wall-clock decode steps.  Neither knows about the other's notion of
+time — the core only ever receives timestamps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+
+def latency_percentile(lats: Sequence[float], q: float) -> float:
+    """Percentile of a latency sample with correct rank rounding.
+
+    Nearest-rank on the sorted sample: rank = ceil(q/100 · n), clamped to
+    [1, n] — so p50 of [1, 2, 3, 4] is 2 (not 3, as naive ``n//2`` indexing
+    gives) and p95 never reads past the end of the list."""
+    if not lats:
+        return float("nan")
+    s = sorted(lats)
+    rank = math.ceil(q / 100.0 * len(s))
+    return s[min(max(rank, 1), len(s)) - 1]
+
+
+@dataclasses.dataclass
+class SchedulerCore:
+    """FIFO admission queue + completion/hedge/requeue bookkeeping.
+
+    Queue entries are ``(request id, arrival time)``; the payload (prompt,
+    analytic work size, …) stays with the caller, keyed by request id."""
+
+    _queue: Deque[Tuple[int, float]] = dataclasses.field(default_factory=deque)
+    done: Dict[int, bool] = dataclasses.field(default_factory=dict)
+    latencies: List[float] = dataclasses.field(default_factory=list)
+    acc_weighted: float = 0.0
+    served: int = 0
+    hedges: int = 0
+    requeues: int = 0
+
+    # --- admission -----------------------------------------------------------
+    def submit(self, rid: int, t_arrival: float) -> None:
+        """Enqueue a new request at the tail (FIFO order = arrival order)."""
+        self._queue.append((rid, t_arrival))
+
+    def pop_next(self) -> Optional[Tuple[int, float]]:
+        """Head-of-line request that is still live, or None.  Entries whose
+        request already completed (hedge duplicates, stale requeues) are
+        dropped on the way — the caller never sees them."""
+        while self._queue:
+            rid, t_arr = self._queue.popleft()
+            if not self.done.get(rid):
+                return rid, t_arr
+        return None
+
+    def has_pending(self) -> bool:
+        while self._queue and self.done.get(self._queue[0][0]):
+            self._queue.popleft()
+        return bool(self._queue)
+
+    # --- priority re-entry ---------------------------------------------------
+    def hedge_front(self, rid: int, t_arrival: float) -> None:
+        """Duplicate a slow in-flight request at the head of the queue; the
+        first completion wins (the duplicate's finish becomes a no-op)."""
+        self._queue.appendleft((rid, t_arrival))
+        self.hedges += 1
+
+    def requeue_front(self, rid: int, t_arrival: float) -> None:
+        """Re-queue a request lost to an instance failure at the head (no
+        request loss, original arrival time preserved for its latency)."""
+        self._queue.appendleft((rid, t_arrival))
+        self.requeues += 1
+
+    # --- completion ----------------------------------------------------------
+    def complete(self, rid: int, t_arrival: float, now: float,
+                 accuracy: float = 0.0) -> bool:
+        """Record a finish.  Returns True for the first completion of ``rid``
+        (latency + accuracy recorded), False for hedge duplicates."""
+        if self.done.get(rid):
+            return False
+        self.done[rid] = True
+        self.latencies.append(now - t_arrival)
+        self.acc_weighted += accuracy
+        self.served += 1
+        return True
+
+    # --- stats ---------------------------------------------------------------
+    def percentile(self, q: float) -> float:
+        return latency_percentile(self.latencies, q) if self.latencies else 0.0

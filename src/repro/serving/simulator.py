@@ -158,9 +158,15 @@ class FluidServer:
         return self.sla_over / max(self.sla_windows, 1)
 
 
-def make_context(family: str, sim: SimConfig) -> Tuple[SCH.SchemeContext, float]:
-    """Builds the scheme context; returns (ctx, arrival_rps)."""
-    variants = get_family(family)
+def make_context(family: str, sim: SimConfig,
+                 variants: Optional[Sequence[Variant]] = None
+                 ) -> Tuple[SCH.SchemeContext, float]:
+    """Builds the scheme context; returns (ctx, arrival_rps).
+
+    ``variants`` overrides the catalog lookup — the real-execution fleet
+    backend optimizes over its engine ladder's variants instead of a
+    catalog family."""
+    variants = list(variants) if variants is not None else get_family(family)
     rng = random.Random(sim.seed)
     # BASE capacity determines the arrival rate and the SLA
     tmp_ctx = SCH.SchemeContext(family, variants, sim.n_blocks, 1.0,
