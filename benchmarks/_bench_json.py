@@ -1,0 +1,33 @@
+"""Shared machine-readable benchmark emission (perf trajectory across PRs).
+
+Every engine benchmark merges its section into ``benchmarks/out/
+BENCH_engine.json`` — one top-level key per script, so re-running one
+benchmark never clobbers another's numbers.  The schema per section is
+flat scalars only (tokens/s, J/token, TTFT p95, blocks-in-use peak, …):
+trivially diffable between commits.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+BENCH_PATH = os.path.join(OUT_DIR, "BENCH_engine.json")
+
+
+def update_bench_json(section: str, payload: Dict) -> str:
+    """Merge ``payload`` under ``section`` in BENCH_engine.json."""
+    os.makedirs(OUT_DIR, exist_ok=True)
+    data: Dict = {}
+    if os.path.exists(BENCH_PATH):
+        try:
+            with open(BENCH_PATH) as f:
+                data = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            data = {}
+    data[section] = payload
+    with open(BENCH_PATH, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return BENCH_PATH

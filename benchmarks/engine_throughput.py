@@ -8,9 +8,11 @@ deterministic, so both modes emit identical tokens: the comparison is at
 strictly equal quality.
 
 Writes ``benchmarks/out/engine_throughput.csv`` (one row per variant × mode)
-for the perf trajectory, and prints the repo's ``name,us_per_call,derived``
-one-line-per-benchmark contract with the continuous/batch-1 speedup as the
-derived value.
+for the perf trajectory, merges the headline numbers (tokens/s, J/token,
+TTFT p95, blocks-in-use peak) into ``benchmarks/out/BENCH_engine.json`` so
+the trajectory is machine-readable across PRs, and prints the repo's
+``name,us_per_call,derived`` one-line-per-benchmark contract with the
+continuous/batch-1 speedup as the derived value.
 
 Usage:  PYTHONPATH=src python benchmarks/engine_throughput.py
             [--requests 16] [--new-tokens 8] [--slots 8] [--layers 8]
@@ -56,7 +58,10 @@ def main() -> int:
                for _ in range(args.requests)]
     max_len = args.prompt_len + args.new_tokens + 2
 
+    from _bench_json import update_bench_json
+
     rows = []
+    bench = {}
     for ev in family:
         g = CG.ConfigGraph.from_dict(base.name, {(ev.variant.name, 16): 1})
         per_mode = {}
@@ -89,6 +94,14 @@ def main() -> int:
         speedup = cb["tokens_per_s"] / max(b1["tokens_per_s"], 1e-9)
         energy_saving = 1.0 - cb["j_per_token"] / max(b1["j_per_token"], 1e-12)
         us = cb["wall_s"] / max(cb["tokens"], 1) * 1e6
+        bench[ev.variant.name] = {
+            "tokens_per_s": round(cb["tokens_per_s"], 2),
+            "j_per_token": round(cb["j_per_token"], 5),
+            "ttft_p95_s": round(cb.get("ttft_p95_s", 0.0), 6),
+            "blocks_peak": cb.get("blocks_peak", 0),
+            "p95_s": round(cb["p95_s"], 6),
+            "speedup_vs_batch1": round(speedup, 3),
+        }
         print(f"engine_throughput_{ev.variant.name},{us:.1f},"
               f"speedup={speedup:.2f}x j_saving={energy_saving * 100:.0f}%")
 
@@ -99,6 +112,8 @@ def main() -> int:
         w.writeheader()
         w.writerows(rows)
     print(f"wrote {path} ({len(rows)} rows)")
+    jpath = update_bench_json("engine_throughput", bench)
+    print(f"updated {jpath}")
     return 0
 
 

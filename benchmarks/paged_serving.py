@@ -1,0 +1,179 @@
+"""Paged vs slotted KV serving at EQUAL arena memory (PR-3 acceptance).
+
+Workload: a mixed 16/128/512-token prompt set sharing a common system-prompt
+prefix — exactly the shape that strands slotted memory (every slot reserves
+``max_len`` tokens, so a 16-token prompt wastes ~97% of its slot) and that
+paging + radix prefix sharing exploits.  Both engines serve the same request
+set closed-loop through the SAME instance graph; greedy decoding makes the
+outputs token-identical, so every comparison is at strictly equal quality.
+
+Acceptance gates printed at the end (and persisted to BENCH_engine.json):
+
+  * sustained admitted concurrency (mean sequences holding cache memory
+    per tick) ≥ 1.5× the slotted engine's at equal arena bytes;
+  * J/token no worse than slotted;
+  * open-loop (Poisson) run at 0.7× the measured saturation rate reports
+    finite queueing delay with p95 within the derived SLA.
+
+Usage:  PYTHONPATH=src python benchmarks/paged_serving.py
+            [--layers 4] [--requests 18] [--new-tokens 24] [--slots 4]
+            [--block-size 16] [--prompt-lens 16,128,512]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from _bench_json import update_bench_json  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=18)
+    ap.add_argument("--new-tokens", type=int, default=24,
+                help="decode length per request: the decode-heavy regime "
+                     "is where paging pays (short generations are "
+                     "prefill-dispatch-bound on CPU)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--chunk-blocks", type=int, default=8,
+                    help="prefill chunk size in blocks (bigger chunks "
+                         "amortize per-call dispatch on long prompts; "
+                         "smaller chunks interleave with decode more finely)")
+    ap.add_argument("--prompt-lens", default="16,128,512")
+    ap.add_argument("--shared-prefix", type=int, default=64,
+                    help="prompts >= this length share a prefix this long")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="measured repetitions; best tokens/s wins (damps "
+                         "CPU scheduling noise)")
+    ap.add_argument("--open-loop-requests", type=int, default=0,
+                    help="0 disables the open-loop stage (the slow test "
+                         "runs it; closed-loop gates stand alone)")
+    args = ap.parse_args()
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.core import config_graph as CG
+    from repro.serving import engine as ENG
+
+    prompt_lens = [int(x) for x in args.prompt_lens.split(",")]
+    base = get_smoke_config(args.arch).with_(n_layers=args.layers,
+                                             dtype=jnp.float32)
+    family = ENG.build_engine_family(base, fracs=(1.0,))
+    g = CG.ConfigGraph.from_dict(base.name, {("x1", 16): 1})
+    max_len = max(prompt_lens) + args.new_tokens + args.block_size
+
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, base.vocab_size,
+                          size=args.shared_prefix).astype(np.int32)
+    prompts = []
+    for i in range(args.requests):
+        L = prompt_lens[i % len(prompt_lens)]
+        p = rng.integers(0, base.vocab_size, size=L).astype(np.int32)
+        if L >= args.shared_prefix:
+            p[:args.shared_prefix] = shared
+        prompts.append(p)
+
+    def measure(kv_layout):
+        kw = dict(n_slots=args.slots, max_len=max_len, kv_layout=kv_layout,
+                  block_size=args.block_size, max_seqs=4 * args.slots,
+                  chunk_blocks=args.chunk_blocks)
+        warm = ENG.RealEngine(family, **kw)                # jit warmup pass
+        warm.configure(g)
+        warm.serve(prompts, n_new=args.new_tokens)
+        # measure on FRESH engines: compiled fns live on the shared family,
+        # but allocator/prefix state starts cold — each rep shows real
+        # prefill plus sharing of the common prefix, not a second pass
+        # serving last rep's fully-cached prompts.  Best tokens/s wins.
+        best_eng, best = None, None
+        for _ in range(args.reps):
+            eng = ENG.RealEngine(family, **kw)
+            eng.configure(g)
+            m = eng.serve(prompts, n_new=args.new_tokens)
+            if best is None or m["tokens_per_s"] > best["tokens_per_s"]:
+                best_eng, best = eng, m
+        return best_eng, best
+
+    eng_s, m_s = measure("slotted")
+    eng_p, m_p = measure("paged")
+
+    # greedy parity: identical tokens at equal quality, or the comparison
+    # is meaningless
+    mismatch = sum(
+        not np.array_equal(eng_s.last_outputs[r], eng_p.last_outputs[r])
+        for r in eng_s.last_outputs)
+    conc_ratio = m_p["mean_admitted"] / max(m_s["mean_admitted"], 1e-9)
+    j_ratio = m_p["j_per_token"] / max(m_s["j_per_token"], 1e-12)
+    arena_tokens = args.slots * max_len
+
+    print(f"arena: {arena_tokens} KV tokens each "
+          f"(slotted {args.slots}×{max_len}; paged "
+          f"{eng_p.n_blocks - 1}×{args.block_size} blocks)")
+    for name, m in (("slotted", m_s), ("paged", m_p)):
+        print(f"  {name:8s} tokens/s={m['tokens_per_s']:8.1f}  "
+              f"J/token={m['j_per_token']:8.4f}  "
+              f"admitted={m['mean_admitted']:5.2f}  "
+              f"ttft_p95={m['ttft_p95_s'] * 1e3:7.1f}ms  "
+              f"blocks_peak={m['blocks_peak']}")
+    print(f"  prefix-hit tokens: {m_p['prefix_hit_tokens']} "
+          f"(chunked prefills: {m_p['prefill_chunks']})")
+
+    ok_parity = mismatch == 0
+    ok_conc = conc_ratio >= 1.5
+    ok_energy = j_ratio <= 1.0 + 1e-6
+    payload = {
+        "tokens_per_s_paged": round(m_p["tokens_per_s"], 2),
+        "tokens_per_s_slotted": round(m_s["tokens_per_s"], 2),
+        "j_per_token_paged": round(m_p["j_per_token"], 5),
+        "j_per_token_slotted": round(m_s["j_per_token"], 5),
+        "ttft_p95_s_paged": round(m_p["ttft_p95_s"], 6),
+        "ttft_p95_s_slotted": round(m_s["ttft_p95_s"], 6),
+        "blocks_peak": m_p["blocks_peak"],
+        "concurrency_ratio": round(conc_ratio, 3),
+        "prefix_hit_tokens": int(m_p["prefix_hit_tokens"]),
+        "token_parity": bool(ok_parity),
+    }
+
+    if args.open_loop_requests > 0:
+        n_new = args.new_tokens
+        sat_rps = m_p["tokens_per_s"] / n_new
+        mo = eng_p.serve_poisson(rate_rps=0.7 * sat_rps,
+                                 n_requests=args.open_loop_requests,
+                                 prompt_lens=prompt_lens, n_new=n_new,
+                                 seed=1)
+        print(f"  open-loop @0.7×sat ({0.7 * sat_rps:.1f} rps): "
+              f"p95={mo['p95_s'] * 1e3:.1f}ms "
+              f"queue_delay_p95={mo['queue_delay_p95_s'] * 1e3:.1f}ms "
+              f"ttft_p95={mo['ttft_p95_s'] * 1e3:.1f}ms")
+        payload.update({
+            "open_loop_rps": round(0.7 * sat_rps, 2),
+            "open_loop_p95_s": round(mo["p95_s"], 6),
+            "open_loop_queue_delay_p95_s": round(mo["queue_delay_p95_s"], 6),
+            "open_loop_ttft_p95_s": round(mo["ttft_p95_s"], 6),
+        })
+
+    jpath = update_bench_json("paged_serving", payload)
+    print(f"updated {jpath}")
+
+    us = m_p["wall_s"] / max(m_p["tokens"], 1) * 1e6
+    print(f"paged_serving,{us:.1f},conc={conc_ratio:.2f}x "
+          f"j_ratio={j_ratio:.2f} parity={'OK' if ok_parity else 'FAIL'}")
+    if not (ok_parity and ok_conc and ok_energy):
+        print(f"ACCEPTANCE FAIL: parity={ok_parity} "
+              f"concurrency {conc_ratio:.2f}x (need >=1.5) "
+              f"j_ratio {j_ratio:.2f} (need <=1.0)")
+        return 1
+    print(f"ACCEPTANCE OK: {conc_ratio:.2f}x concurrency, "
+          f"{(1 - j_ratio) * 100:.0f}% lower J/token, token parity exact")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,91 @@
+"""Paged-KV serving demo: block arena + radix prefix sharing + chunked
+prefill + OPEN-LOOP (Poisson) arrivals on the real-execution engine.
+
+A chat-style workload — every prompt opens with the same system preamble,
+user turns vary wildly in length — is exactly where the slotted cache
+strands memory: a 12-token question reserves the same ``max_len`` slot as a
+300-token document.  The paged engine admits on block availability, prefills
+one chunk per tick (decoding neighbours never stall), and serves the shared
+preamble from the radix cache after its first appearance.
+
+Run:  PYTHONPATH=src python examples/paged_serving_demo.py [--requests 18]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--requests", type=int, default=18)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--preamble", type=int, default=48)
+    args = ap.parse_args()
+
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.core import config_graph as CG
+    from repro.serving import engine as ENG
+
+    base = get_smoke_config(args.arch).with_(n_layers=4, dtype=jnp.float32)
+    family = ENG.build_engine_family(base, fracs=(1.0,))
+    g = CG.ConfigGraph.from_dict(base.name, {("x1", 16): 1})
+
+    rng = np.random.default_rng(0)
+    preamble = rng.integers(0, base.vocab_size,
+                            size=args.preamble).astype(np.int32)
+    lens = (12, 64, 160)
+    prompts = []
+    for i in range(args.requests):
+        turn = rng.integers(0, base.vocab_size,
+                            size=lens[i % len(lens)]).astype(np.int32)
+        prompts.append(np.concatenate([preamble, turn]))
+    max_len = args.preamble + max(lens) + args.new_tokens + 16
+
+    print(f"=== paged KV serving demo ({args.arch}, "
+          f"{args.requests} chat requests, shared {args.preamble}-token "
+          f"preamble) ===")
+    eng = ENG.RealEngine(family, n_slots=4, max_len=max_len,
+                         kv_layout="paged", block_size=16, max_seqs=12,
+                         chunk_blocks=4)
+    eng.configure(g)
+    inst = eng.instances[0]
+    print(f"arena: {inst.alloc.num_allocatable} × {inst.block_size}-token "
+          f"blocks (= 4 slotted slots of {max_len})")
+
+    # closed loop: everything arrives at once — makespan + packing
+    m = eng.serve(prompts, n_new=args.new_tokens)
+    print(f"\nclosed loop : {m['tokens_per_s']:7.1f} tok/s  "
+          f"J/token={m['j_per_token']:.3f}  "
+          f"admitted={m['mean_admitted']:.1f} seqs  "
+          f"blocks peak={m['blocks_peak']}  "
+          f"prefix hits={m['prefix_hit_tokens']} tokens "
+          f"({m['prefill_chunks']} chunked prefills)")
+
+    # open loop: Poisson arrivals at ~60% of the measured saturation rate —
+    # now queueing delay and TTFT are real, per-request quantities
+    sat = m["tokens_per_s"] / args.new_tokens
+    mo = eng.serve_poisson(rate_rps=0.6 * sat, n_requests=args.requests,
+                           prompt_lens=[args.preamble + L for L in lens],
+                           n_new=args.new_tokens, seed=1)
+    print(f"open loop   : offered {mo['offered_rps']:.1f} rps "
+          f"(0.6× saturation)  p95={mo['p95_s']*1e3:.1f}ms  "
+          f"queue-delay p95={mo['queue_delay_p95_s']*1e3:.1f}ms  "
+          f"TTFT p95={mo['ttft_p95_s']*1e3:.1f}ms")
+
+    # the radix cache persists across serves: the same preamble now hits
+    m2 = eng.serve(prompts, n_new=args.new_tokens)
+    print(f"second pass : {m2['tokens_per_s']:7.1f} tok/s  "
+          f"prefix hits={m2['prefix_hit_tokens']} tokens "
+          f"({m2['prefill_chunks']} chunked prefills)")
+    print("\nOK — paged arena, radix prefix sharing, chunked prefill and "
+          "open-loop queueing metrics on real JAX execution.")
+
+
+if __name__ == "__main__":
+    main()

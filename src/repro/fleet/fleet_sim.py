@@ -79,6 +79,19 @@ class FleetConfig:
     # spatial routing
     max_rho: float = 0.88
     net_delay_s: float = 0.002         # global front-door network penalty
+    # network-egress carbon: hauling a request's payload to a region emits
+    # payload_gb_per_req × that region's path intensity (gCO2/GB).  None /
+    # 0.0 keeps the PR-1 latency-only behaviour.
+    payload_gb_per_req: float = 0.0
+    egress_g_per_gb: Optional[Dict[str, float]] = None    # region → gCO2/GB
+    # data gravity: hard per-region interactive rate caps (data residency)
+    gravity_caps: Optional[Dict[str, float]] = None       # region → rps
+    # deferrable-batch migration cost: moving queued work between regions
+    # checkpoints and re-stages it — it lands ``migrate_overhead_s`` later
+    # and burns ``migrate_j_per_req`` joules per request moved (charged to
+    # the SOURCE region's accountant).  Zero = PR-1's free moves.
+    migrate_overhead_s: float = 0.0
+    migrate_j_per_req: float = 0.0
     # elastic block scaling
     elastic: bool = True
     min_blocks: int = 0                # 0 = parked regions fully suspend
@@ -105,6 +118,8 @@ class FleetConfig:
     engine_layers: int = 2             # depth of the x1 engine variant
     engine_slots: int = 2              # KV-cache slots per instance
     engine_max_len: int = 32
+    engine_kv_layout: str = "slotted"  # "paged" = kvpool block arena + radix
+                                       # prefix cache (PR 3) per region
     probe_requests: int = 4            # real requests probed per window
     probe_prompt_len: int = 6
     probe_new_tokens: int = 4
@@ -199,7 +214,8 @@ class _Region:
             from repro.serving import backends as BK
             from repro.serving import engine as ENG
             eng = ENG.RealEngine(engine_family, n_slots=cfg.engine_slots,
-                                 max_len=cfg.engine_max_len)
+                                 max_len=cfg.engine_max_len,
+                                 kv_layout=cfg.engine_kv_layout)
             self.server = BK.RealWindowServer(
                 self.ctx.variants, self.acct, self.ctx.obj_cfg.l_tail_s,
                 engine=eng, probe_requests=cfg.probe_requests,
@@ -371,19 +387,29 @@ class _Region:
 def _rebalance_queues(regions: Sequence[_Region], t: float,
                       caps: Dict[str, float],
                       headroom: float = 0.7,
-                      lookahead_s: float = 8 * 3600.0) -> None:
+                      lookahead_s: float = 8 * 3600.0,
+                      cfg: Optional[FleetConfig] = None) -> None:
     """Work stealing for queued deferrable backlog: an entry whose deadline
     is EDF-infeasible against its region's realized spare capacity migrates
     to the region with the most spare.  Deferrable batches are portable; a
     queue is not a commitment to drain in place, and without this a region
     that scales down (or suspends) after accepting work strands it.
 
+    Moves are NOT free (``cfg.migrate_overhead_s`` / ``migrate_j_per_req``):
+    the batch checkpoints, ships, and re-stages, so the destination only has
+    ``deadline − t − overhead`` seconds of runway for it, and the
+    checkpoint+transfer energy is charged to the SOURCE region's accountant
+    at move time.  A move that no longer pays off under those costs — the
+    destination's overhead-discounted slack is no better than just staying
+    put — is skipped.
+
     Must run before this window's releases: at that point each region's
     queue total equals its server's deferrable backlog, so moving an entry
     moves fluid work the server has not yet absorbed elsewhere."""
+    overhead_s = cfg.migrate_overhead_s if cfg is not None else 0.0
+    j_per_req = cfg.migrate_j_per_req if cfg is not None else 0.0
     spare = {r.name: max(caps[r.name] - r.int_rate, 0.0) for r in regions}
     queued = {r.name: sum(e[2] for e in r.queue) for r in regions}
-    by_name = {r.name: r for r in regions}
     for src in regions:
         cum = 0.0
         for entry in list(src.queue):
@@ -393,19 +419,42 @@ def _rebalance_queues(regions: Sequence[_Region], t: float,
             if (dl - t > lookahead_s
                     or cum / horizon <= headroom * spare[src.name]):
                 continue
-            # receiving region must absorb its own queue plus this entry
-            def slack(r: _Region) -> float:
+
+            def slack_src(r: _Region) -> float:
                 return (headroom * spare[r.name]
                         - (queued[r.name] + w) / horizon)
+
+            # migrated work arrives ``overhead_s`` late: the receiver's
+            # runway shrinks, so a near-deadline entry may be unmovable even
+            # into an idle region — checkpointing it would eat the slack the
+            # move was supposed to buy.  With zero overhead the destination
+            # shares the source's 60 s floor (free instant moves, the PR-1
+            # behaviour), so the guard below can only fire when a real
+            # re-stage delay exists.
+            horizon_dst = dl - t - overhead_s
+            if overhead_s <= 0.0:
+                horizon_dst = max(horizon_dst, 60.0)
+
+            def slack_dst(r: _Region) -> float:
+                if horizon_dst < 60.0:
+                    return -math.inf           # can't re-stage before deadline
+                return (headroom * spare[r.name]
+                        - (queued[r.name] + w) / horizon_dst)
+
             dst = max((r for r in regions if r is not src),
-                      key=slack, default=None)
-            if dst is None or slack(dst) <= slack(src) + 1e-9:
-                continue               # nowhere better — leave it
+                      key=slack_dst, default=None)
+            if dst is None or slack_dst(dst) <= slack_src(src) + 1e-9:
+                continue               # move doesn't pay — leave it
             src.queue.remove(entry)
             src.server.defer_backlog = max(
                 src.server.defer_backlog - w, 0.0)
             dst.server.defer_backlog += w
             dst.enqueue(dl, job_id, w)
+            if j_per_req > 0.0:
+                # checkpoint + transfer energy, charged where the data
+                # leaves (1 s accounting window at the equivalent power —
+                # CarbonAccountant integrates power × duration)
+                src.acct.add(t, 1.0, w * j_per_req)
             queued[src.name] -= w
             queued[dst.name] += w
             cum -= w
@@ -431,8 +480,12 @@ def _snapshot(r: _Region, t: float, cfg: FleetConfig) -> RT.RegionSnapshot:
     def p95_at(rate: float) -> float:
         return OBJ.evaluate(graph, variants, max(rate, 1e-9)).p95_latency_s
 
-    return RT.RegionSnapshot(r.name, probe.capacity_rps, r.ref_energy_j,
-                             r.trace.at(t), cfg.net_delay_s, p95_at)
+    return RT.RegionSnapshot(
+        r.name, probe.capacity_rps, r.ref_energy_j, r.trace.at(t),
+        cfg.net_delay_s, p95_at,
+        egress_gb_per_req=cfg.payload_gb_per_req,
+        egress_g_per_gb=(cfg.egress_g_per_gb or {}).get(r.name, 0.0),
+        gravity_cap_rps=(cfg.gravity_caps or {}).get(r.name, math.inf))
 
 
 def _plan_slots(regions: Sequence[_Region], t: float, horizon_end: float,
@@ -560,7 +613,8 @@ def run_fleet(family: str, traces: Dict[str, CB.CarbonTrace],
         caps = {r.name: r.capacity_rps() for r in regions}
 
         # 3. migrate deadline-threatened queued work before new releases
-        _rebalance_queues(regions, t, caps)
+        # (charging checkpoint/transfer cost, skipping unpaying moves)
+        _rebalance_queues(regions, t, caps, cfg=cfg)
 
         # 4. release planned deferrable work arriving in this window
         release: Dict[str, float] = {r.name: 0.0 for r in regions}

@@ -4,5 +4,7 @@ compute hot spots, each with a jit'd wrapper (ops.py) and a pure-jnp oracle
 
   flash_attention   — prefill attention, online softmax over KV blocks
   decode_attention  — flash-decode: one token vs a long cache, SMEM length
+  paged_attention   — flash-decode over block-table KV (scalar-prefetched
+                      gather through the paged arena — the kvpool path)
   ssd_scan          — Mamba2 SSD: chunk-dual matmuls + carried VMEM state
 """

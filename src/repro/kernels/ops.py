@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _paged
 from repro.kernels import ref as _ref
 from repro.kernels import ssd_scan as _ssd
 
@@ -35,6 +36,16 @@ def decode_attention(q, k_cache, v_cache, length, *, use_kernel: bool = True):
         return _ref.decode_attention_ref(q, k_cache, v_cache, length)
     return _dec.decode_attention(q, k_cache, v_cache, length,
                                  interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def paged_decode_attention(q, k_arena, v_arena, block_tables, lengths, *,
+                           use_kernel: bool = True):
+    if not use_kernel:
+        return _ref.paged_decode_attention_ref(q, k_arena, v_arena,
+                                               block_tables, lengths)
+    return _paged.paged_decode_attention(q, k_arena, v_arena, block_tables,
+                                         lengths, interpret=not _on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "use_kernel"))

@@ -53,6 +53,23 @@ def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
     return o.reshape(b, H, dh).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q: jnp.ndarray, k_arena: jnp.ndarray,
+                               v_arena: jnp.ndarray,
+                               block_tables: jnp.ndarray,
+                               lengths) -> jnp.ndarray:
+    """One-position attention over a PAGED KV cache.  q: (b, H, dh);
+    arenas: (n_blocks, block_size, K, dh); block_tables: (b, n_pages) i32
+    arena block ids (0-padded — block 0 is the junk sink); lengths: (b,)
+    valid token counts.  Gathers each row's pages into a contiguous cache and
+    applies the same masking contract as ``decode_attention_ref``."""
+    b = q.shape[0]
+    _, bs, K, dh = k_arena.shape
+    n_pages = block_tables.shape[1]
+    kc = k_arena[block_tables].reshape(b, n_pages * bs, K, dh)
+    vc = v_arena[block_tables].reshape(b, n_pages * bs, K, dh)
+    return decode_attention_ref(q, kc, vc, lengths)
+
+
 def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
             C: jnp.ndarray, chunk: int,
             init_state: Optional[jnp.ndarray] = None

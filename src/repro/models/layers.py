@@ -282,6 +282,81 @@ def attention_decode_slots_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
     return out, cache_k, cache_v
 
 
+def gather_paged_kv(arena_k: jnp.ndarray, arena_v: jnp.ndarray,
+                    tables: jnp.ndarray):
+    """Materialize per-row contiguous KV views from a paged arena.
+
+    arenas: (n_blocks, block_size, K, dh); tables: (b, n_pages) i32 arena
+    block ids (0-padded — block 0 is the junk sink, masked by lengths at the
+    attention).  Returns (k, v) shaped (b, n_pages·block_size, K, dh).  On
+    TPU the Pallas ``kernels.paged_attention`` kernel performs this gather
+    inside the BlockSpec index map instead of materializing it."""
+    b, n_pages = tables.shape
+    _, bs, K, dh = arena_k.shape
+    k = arena_k[tables].reshape(b, n_pages * bs, K, dh)
+    v = arena_v[tables].reshape(b, n_pages * bs, K, dh)
+    return k, v
+
+
+def attention_decode_paged_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                                 cos, sin, arena_k: jnp.ndarray,
+                                 arena_v: jnp.ndarray, tables: jnp.ndarray,
+                                 lengths: jnp.ndarray, write_bid: jnp.ndarray,
+                                 write_off: jnp.ndarray, *, window=None):
+    """One paged continuous-batching decode step: each row scatters its new
+    K/V into arena block ``write_bid[i]`` at offset ``write_off[i]`` (the
+    junk block 0 for inactive rows) and attends over its own block table's
+    valid prefix.  x: (b, 1, d); arenas (n_blocks, bs, K, dh); tables
+    (b, n_pages); lengths (b,) i32.  Returns (out, arena_k, arena_v)."""
+    q, k, v = _project_qkv(p, x, cfg, cos, sin)
+    b = x.shape[0]
+    arena_k = arena_k.at[write_bid, write_off].set(k[:, 0].astype(arena_k.dtype))
+    arena_v = arena_v.at[write_bid, write_off].set(v[:, 0].astype(arena_v.dtype))
+    kc, vc = gather_paged_kv(arena_k, arena_v, tables)
+    o = decode_attention_ref(q, kc, vc, lengths + 1, window=window)
+    out = dense_apply(p["wo"], o.reshape(b, 1, cfg.n_heads * cfg.d_head))
+    return out, arena_k, arena_v
+
+
+def attention_prefill_paged_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                                  cos, sin, arena_k: jnp.ndarray,
+                                  arena_v: jnp.ndarray, table: jnp.ndarray,
+                                  positions: jnp.ndarray,
+                                  write_bid: jnp.ndarray,
+                                  write_off: jnp.ndarray, *, window=None):
+    """One chunk of chunked prefill for a single sequence against the paged
+    arena: the chunk's rotated K/V scatter into their arena slots (junk
+    block 0 for the padded tail), then the chunk's queries attend causally
+    over the whole gathered table — cached prefix blocks included, so a
+    prefix-cache hit never replays shared tokens.
+
+    x: (1, C, d); table: (n_pages,) i32; positions: (C,) absolute token
+    positions of the chunk.  Returns (out (1, C, d), arena_k, arena_v)."""
+    q, k, v = _project_qkv(p, x, cfg, cos, sin)
+    C = x.shape[1]
+    arena_k = arena_k.at[write_bid, write_off].set(k[0].astype(arena_k.dtype))
+    arena_v = arena_v.at[write_bid, write_off].set(v[0].astype(arena_v.dtype))
+    kc, vc = gather_paged_kv(arena_k, arena_v, table[None])   # (1, S, K, dh)
+    S, K = kc.shape[1], kc.shape[2]
+    H, dh = cfg.n_heads, cfg.d_head
+    g = H // K
+    qg = q.reshape(1, C, K, g, dh)
+    s = jnp.einsum("bqkgd,bnkd->bkgqn", (qg * dh ** -0.5).astype(kc.dtype),
+                   kc, preferred_element_type=jnp.float32)
+    kv_pos = jnp.arange(S)
+    mask = kv_pos[None, :] <= positions[:, None]              # causal (C, S)
+    if window is not None:
+        eff = jnp.where(jnp.asarray(window) > 0,
+                        jnp.asarray(window, jnp.int32), jnp.int32(2**30))
+        mask &= (positions[:, None] - kv_pos[None, :]) < eff
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqn,bnkd->bqkgd", pr.astype(vc.dtype), vc,
+                   preferred_element_type=jnp.float32)
+    out = dense_apply(p["wo"], o.astype(q.dtype).reshape(1, C, H * dh))
+    return out, arena_k, arena_v
+
+
 def cross_kv(p: Params, memory: jnp.ndarray, cfg: ModelConfig):
     """Precompute cross-attention K/V from encoder memory."""
     b, s, _ = memory.shape

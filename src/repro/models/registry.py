@@ -86,3 +86,36 @@ def decode_slots(params: Params, cache: Params, batch: dict, cfg: ModelConfig,
                  active: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
     """Batched decode over all slots -> (logits (n_slots, V), new_cache)."""
     return T.decode_slots_lm(params, cache, batch["tokens"], cfg, active)
+
+
+# --- paged KV arena (kvpool serving engine) -----------------------------------
+def supports_paged(cfg: ModelConfig) -> bool:
+    """The paged arena covers exactly the slotted families (pure-attention
+    decoders): the block table is a map over the same DUS-style cache."""
+    return supports_slots(cfg)
+
+
+def make_block_arena(cfg: ModelConfig, n_blocks: int, block_size: int,
+                     dtype=jnp.bfloat16) -> Params:
+    """Paged KV arena (block 0 = junk sink); ``serving.kvpool`` owns the
+    free-list / refcount / block-table map of it."""
+    return T.init_block_arena(cfg, n_blocks, block_size, dtype)
+
+
+def prefill_paged(params: Params, batch: dict, cfg: ModelConfig,
+                  arena: Params, table: jnp.ndarray, n_past: jnp.ndarray,
+                  true_c: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    """One chunk of chunked prefill for one sequence -> (logits (1, C, V),
+    new_arena).  Positions n_past..n_past+true_c-1; the padded chunk tail
+    scatters into the junk block."""
+    return T.prefill_paged_lm(params, batch["tokens"], cfg, arena, table,
+                              n_past, true_c)
+
+
+def decode_paged(params: Params, arena: Params, batch: dict, cfg: ModelConfig,
+                 tables: jnp.ndarray, lengths: jnp.ndarray,
+                 active: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    """Batched paged decode step -> (logits (b, V), new_arena).  ``lengths``
+    are host-managed; inactive rows write to the junk block."""
+    return T.decode_paged_lm(params, arena, batch["tokens"], cfg, tables,
+                             lengths, active)

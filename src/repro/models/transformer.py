@@ -491,6 +491,134 @@ def decode_slots_lm(params: Params, cache: Params, tokens: jnp.ndarray,
 
 
 # =============================================================================
+# paged KV arena (kvpool serving engine)
+# =============================================================================
+def init_block_arena(cfg: ModelConfig, n_blocks: int, block_size: int,
+                     dtype=jnp.bfloat16) -> Params:
+    """Paged KV arena: every sequence's cache is a list of fixed-size blocks
+    carved from this one allocation (``serving.kvpool`` owns the map: free
+    list, refcounts, block tables).  Block 0 is the junk sink for masked
+    writes — it is never handed to a sequence."""
+    assert supports_slots(cfg), f"paged arena unsupported for {cfg.family}"
+    K, dh = cfg.n_kv_heads, cfg.d_head
+    return {
+        "k": jnp.zeros((cfg.n_layers, n_blocks, block_size, K, dh), dtype),
+        "v": jnp.zeros((cfg.n_layers, n_blocks, block_size, K, dh), dtype),
+    }
+
+
+def prefill_paged_lm(params: Params, tokens: jnp.ndarray, cfg: ModelConfig,
+                     arena: Params, table: jnp.ndarray, n_past: jnp.ndarray,
+                     true_c: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    """One CHUNK of chunked prefill for a single sequence.
+
+    tokens: (1, C) i32 — the chunk, zero-padded past ``true_c``; table:
+    (n_pages,) i32 block table (covers the whole sequence, 0-padded);
+    n_past: scalar i32 tokens already in the arena (prefix-cache hits plus
+    previously prefilled chunks); true_c: scalar i32 real chunk length.
+    The chunk's K/V land at absolute positions ``n_past .. n_past+true_c-1``
+    (padded tail rows scatter into the junk block); its queries attend
+    causally over everything cached so far, which is exactly full-sequence
+    causal attention computed incrementally — chunking changes scheduling,
+    not math.  Returns (logits (1, C, V), new_arena)."""
+    assert supports_slots(cfg), f"paged prefill unsupported for {cfg.family}"
+    _, C = tokens.shape
+    bs = arena["k"].shape[2]
+    n_pages = table.shape[0]
+    x = L.embedding_apply(params["embed"], tokens)
+    positions = n_past + jnp.arange(C, dtype=jnp.int32)
+    (cos_l, sin_l), (cos_g, sin_g) = _rope_tables(cfg, positions)
+    windows_np, is_global_np = layer_pattern(cfg)
+    has_win = _has_window(cfg)
+    valid = positions < n_past + true_c
+    write_bid = jnp.where(
+        valid, table[jnp.clip(positions // bs, 0, n_pages - 1)], 0)
+    write_off = positions % bs
+
+    windows = jnp.asarray(windows_np)
+    is_global = jnp.asarray(is_global_np)
+
+    def body(x, xs):
+        p, ak, av, win, isg = xs
+        cos = jnp.where(isg, cos_g, cos_l)
+        sin = jnp.where(isg, sin_g, sin_l)
+        h = L.rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+        a, ak2, av2 = L.attention_prefill_paged_apply(
+            p["attn"], h, cfg, cos, sin, ak, av, table, positions,
+            write_bid, write_off, window=win if has_win else None)
+        x = x + a
+        h = L.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+        if cfg.is_moe:
+            y, _ = M.moe_apply(p["moe"], h, cfg)
+        else:
+            y = L.mlp_apply(p["mlp"], h, cfg)
+        return x + y, (ak2, av2)
+
+    x, (k2, v2) = jax.lax.scan(body, x, (params["layers"], arena["k"],
+                                         arena["v"], windows, is_global))
+    x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.embedding_logits(params["embed"], x)
+    else:
+        logits = L.dense_apply(params["lm_head"], x)
+    return logits, {"k": k2, "v": v2}
+
+
+def decode_paged_lm(params: Params, arena: Params, tokens: jnp.ndarray,
+                    cfg: ModelConfig, tables: jnp.ndarray,
+                    lengths: jnp.ndarray, active: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, Params]:
+    """One batched decode step over all rows of a paged batch.
+
+    tokens: (b, 1) i32; tables: (b, n_pages) i32; lengths: (b,) i32 valid
+    token counts; active: (b,) bool.  Inactive rows ride along for static
+    shapes but scatter into the junk block and their outputs are garbage —
+    the host does not advance them (``lengths`` stay host-managed, unlike
+    the slotted cache's device-side vector).  Returns (logits (b, V),
+    new_arena)."""
+    bs = arena["k"].shape[2]
+    n_pages = tables.shape[1]
+    b = tokens.shape[0]
+    x = L.embedding_apply(params["embed"], tokens)
+    positions = lengths[:, None]
+    (cos_l, sin_l), (cos_g, sin_g) = _rope_tables(cfg, positions)
+    windows_np, is_global_np = layer_pattern(cfg)
+    has_win = _has_window(cfg)
+    page = jnp.clip(lengths // bs, 0, n_pages - 1)
+    write_bid = jnp.where(
+        active, jnp.take_along_axis(tables, page[:, None], axis=1)[:, 0], 0)
+    write_off = jnp.where(active, lengths % bs, 0)
+
+    windows = jnp.asarray(windows_np)
+    is_global = jnp.asarray(is_global_np)
+
+    def body(x, xs):
+        p, ak, av, win, isg = xs
+        cos = jnp.where(isg, cos_g, cos_l)
+        sin = jnp.where(isg, sin_g, sin_l)
+        h = L.rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+        a, ak2, av2 = L.attention_decode_paged_apply(
+            p["attn"], h, cfg, cos, sin, ak, av, tables, lengths,
+            write_bid, write_off, window=win if has_win else None)
+        x = x + a
+        h = L.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+        if cfg.is_moe:
+            y, _ = M.moe_apply(p["moe"], h, cfg)
+        else:
+            y = L.mlp_apply(p["mlp"], h, cfg)
+        return x + y, (ak2, av2)
+
+    x, (k2, v2) = jax.lax.scan(body, x, (params["layers"], arena["k"],
+                                         arena["v"], windows, is_global))
+    x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.embedding_logits(params["embed"], x)
+    else:
+        logits = L.dense_apply(params["lm_head"], x)
+    return logits[:, 0, :], {"k": k2, "v": v2}
+
+
+# =============================================================================
 # VLM helper — merge precomputed patch embeddings into the token stream
 # =============================================================================
 def merge_patch_embeds(token_embeds: jnp.ndarray, patch_embeds: jnp.ndarray,

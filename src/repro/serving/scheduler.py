@@ -68,6 +68,13 @@ class SchedulerCore:
                 return rid, t_arr
         return None
 
+    def peek_next(self) -> Optional[Tuple[int, float]]:
+        """Head-of-line live request WITHOUT popping it — admission control
+        that depends on the request (does this prompt fit the instance's
+        free blocks?) peeks first and only pops once a home is found, so a
+        temporarily unadmittable request keeps its FIFO position."""
+        return self._queue[0] if self.has_pending() else None
+
     def has_pending(self) -> bool:
         while self._queue and self.done.get(self._queue[0][0]):
             self._queue.popleft()

@@ -235,6 +235,25 @@ def test_warm_configure_identical_outputs_and_faster(family):
     assert eng.last_reconfig_s == t_warm
 
 
+def test_warmup_covers_every_serve_bucket_no_recompiles(family):
+    """``warmup`` must compile EXACTLY the jit specialisations ``serve`` can
+    reach (``serve_buckets``): a missed bucket re-jits on the first real
+    request at that length, polluting its measured first-token latency.
+    Serve a prompt at every reachable bucket (including a non-power-of-two
+    max_len's top bucket) and assert the per-variant jit caches are frozen."""
+    eng = ENG.RealEngine(family, n_slots=2, max_len=42)   # non-power-of-two
+    eng.configure(CG.ConfigGraph.from_dict(CFG.name, {("x1", 16): 1}))
+    assert ENG.serve_buckets(42) == [8, 16, 32, 64]
+    fns = eng.family["x1"].fns
+    before = {k: fns[k]._cache_size() for k in ("prefill", "decode", "write")}
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, CFG.vocab_size, size=(1, L)).astype(np.int32)
+               for L in (3, 8, 13, 27, 41)]              # one per bucket
+    eng.serve(prompts, n_new=1)
+    after = {k: fns[k]._cache_size() for k in ("prefill", "decode", "write")}
+    assert after == before, f"serve re-jitted: {before} -> {after}"
+
+
 def test_generate_batched_rows_decode_their_own_argmax(family):
     """The old engine hard-coded lg[0]/scalar tokens, so every row of a
     batched prompt decoded row 0's continuation.  Each row must match its

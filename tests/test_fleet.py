@@ -138,6 +138,136 @@ def test_router_overload_spreads_and_reports_overflow():
     assert sum(d.rates.values()) == pytest.approx(500.0)
 
 
+def test_router_egress_carbon_flips_routing():
+    """A cleaner grid behind a carbon-expensive network path loses to a
+    dirtier local region once egress dominates compute carbon: at 500 J and
+    a 2:1 grid-CI gap the compute spread is ~0.016 gCO2/req, so 0.5 GB over
+    a 0.1 gCO2/GB path (0.05 g) flips the water-fill order."""
+    def snaps(egress):
+        clean_far = RT.RegionSnapshot(
+            "clean-far", 1000.0, 500.0, 100.0, 0.0,
+            lambda r: 0.005 * (1 + r / 1000.0),
+            egress_gb_per_req=0.5, egress_g_per_gb=egress)
+        dirty_near = RT.RegionSnapshot(
+            "dirty-near", 1000.0, 500.0, 200.0, 0.0,
+            lambda r: 0.005 * (1 + r / 1000.0))
+        return [clean_far, dirty_near]
+
+    base = RT.route_interactive(500.0, snaps(0.0), sla_s=1.0)
+    assert base.rate("clean-far") == pytest.approx(500.0)   # grid CI decides
+    flipped = RT.route_interactive(500.0, snaps(0.1), sla_s=1.0)
+    assert flipped.rate("dirty-near") == pytest.approx(500.0)
+    assert flipped.rate("clean-far") == 0.0
+    # the snapshot exposes both terms so the flip is auditable
+    s = snaps(0.1)[0]
+    assert s.egress_g_per_req() > s.carbon_g_per_req()
+
+
+def test_router_data_gravity_caps_clean_region():
+    """Data residency is a hard cap: the cleanest region only takes its
+    gravity allowance, the remainder water-fills onward — and overload
+    spreading respects the cap too."""
+    clean = RT.RegionSnapshot("clean", 1000.0, 500.0, 100.0, 0.0,
+                              lambda r: 0.005, gravity_cap_rps=100.0)
+    dirty = RT.RegionSnapshot("dirty", 1000.0, 500.0, 400.0, 0.0,
+                              lambda r: 0.005)
+    d = RT.route_interactive(500.0, [clean, dirty], sla_s=1.0, max_rho=0.85)
+    assert d.rate("clean") == pytest.approx(100.0)
+    assert d.rate("dirty") == pytest.approx(400.0)
+    # overload beyond every SLA/rho cap: gravity is HARD — the capped
+    # region takes nothing past its allowance, the spill lands on the
+    # region with remaining headroom, and total demand is conserved
+    d2 = RT.route_interactive(2000.0, [clean, dirty], sla_s=1.0, max_rho=0.85)
+    assert d2.overflow_rps > 0
+    assert d2.rate("clean") == pytest.approx(100.0)
+    assert sum(d2.rates.values()) == pytest.approx(2000.0)
+
+
+# =============================================================================
+# queue rebalancer migration cost
+# =============================================================================
+class _StubServer:
+    def __init__(self):
+        self.defer_backlog = 0.0
+
+
+class _StubRegion:
+    """Duck-typed stand-in for fleet_sim._Region as the rebalancer sees it."""
+
+    def __init__(self, name, int_rate, trace):
+        self.name = name
+        self.int_rate = int_rate
+        self.queue = []
+        self.server = _StubServer()
+        self.acct = CB.CarbonAccountant(trace)
+
+    def enqueue(self, deadline_s, job_id, work):
+        self.queue.append([deadline_s, job_id, work])
+        self.queue.sort()
+
+
+def _flat_trace(ci=300.0, hours=24.0):
+    t = np.arange(0, hours * 3600.0 + 1, 1800.0)
+    return CB.CarbonTrace("flat", t, np.full_like(t, ci))
+
+
+def test_rebalance_charges_migration_energy_and_moves():
+    """An EDF-infeasible entry migrates to a destination that can actually
+    drain it, and the checkpoint/transfer energy is charged to the source
+    (moves were free in PR 1)."""
+    src = _StubRegion("src", int_rate=95.0, trace=_flat_trace())
+    dst = _StubRegion("dst", int_rate=0.0, trace=_flat_trace())
+    # ~14 rps of drain needed; src has 3.5 rps of headroom, dst has 70
+    src.queue = [[3600.0, "job", 50_000.0]]
+    src.server.defer_backlog = 50_000.0
+    caps = {"src": 100.0, "dst": 100.0}
+    cfg = FS.FleetConfig(migrate_overhead_s=60.0, migrate_j_per_req=0.05)
+    FS._rebalance_queues([src, dst], 0.0, caps, cfg=cfg)
+    assert not src.queue and dst.queue           # moved, and stayed moved
+    assert src.acct.energy_j == pytest.approx(50_000.0 * 0.05)
+    assert src.acct.carbon_g > 0
+    assert dst.server.defer_backlog == pytest.approx(50_000.0)
+    assert src.server.defer_backlog == 0.0
+
+
+def test_rebalance_skips_move_that_no_longer_pays_off():
+    """A move only pays off if the destination can still make the deadline
+    AFTER the checkpoint/re-stage delay: with the overhead eating the
+    runway the entry stays put and no cost is charged — while the same
+    entry under free moves (cfg=None, the PR-1 behaviour) migrates."""
+    def fresh():
+        src = _StubRegion("src", int_rate=95.0, trace=_flat_trace())
+        dst = _StubRegion("dst", int_rate=0.0, trace=_flat_trace())
+        src.queue = [[600.0, "job", 20_000.0]]   # 33 rps needed: dst-feasible
+        src.server.defer_backlog = 20_000.0
+        return src, dst
+    caps = {"src": 100.0, "dst": 100.0}
+    src, dst = fresh()
+    # overhead eats the runway: 600 s deadline - 550 s re-stage < a minute
+    cfg = FS.FleetConfig(migrate_overhead_s=550.0, migrate_j_per_req=0.05)
+    FS._rebalance_queues([src, dst], 0.0, caps, cfg=cfg)
+    assert src.queue and not dst.queue           # stayed
+    assert src.acct.energy_j == 0.0              # no cost charged
+    # identical situation with free instant moves DOES migrate
+    src, dst = fresh()
+    FS._rebalance_queues([src, dst], 0.0, caps, cfg=None)
+    assert not src.queue and dst.queue
+
+
+def test_fleet_region_engine_kv_layout_plumbing():
+    """FleetConfig.engine_kv_layout reaches each region's RealEngine: the
+    fleet's real backend inherits the paged KV pool through the same
+    Controller.maybe_reoptimize path with no further wiring."""
+    pytest.importorskip("jax")
+    from repro.serving import backends as BK
+    cfg = FS.FleetConfig(backend="real", engine_kv_layout="paged")
+    fam = BK.build_real_family(cfg.engine_arch, cfg.engine_layers,
+                               fracs=(1.0,), seed=cfg.seed)
+    region = FS._Region("r0", CB.make_trace("CISO-March", hours=2),
+                        fam[0].variant.family, cfg, engine_family=fam)
+    assert region.server.engine.kv_layout == "paged"
+
+
 # =============================================================================
 # controller predictive trigger
 # =============================================================================
