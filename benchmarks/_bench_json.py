@@ -1,10 +1,12 @@
 """Shared machine-readable benchmark emission (perf trajectory across PRs).
 
-Every engine benchmark merges its section into ``benchmarks/out/
-BENCH_engine.json`` — one top-level key per script, so re-running one
-benchmark never clobbers another's numbers.  The schema per section is
-flat scalars only (tokens/s, J/token, TTFT p95, blocks-in-use peak, …):
-trivially diffable between commits.
+Every engine benchmark merges its section into the ROOT-LEVEL
+``BENCH_engine.json`` — one top-level key per script, so re-running one
+benchmark never clobbers another's numbers, and the file sits where a
+cross-commit diff naturally finds it (``benchmarks/run.py --json``
+refreshes it from the harness).  The schema per section is flat scalars
+only (tokens/s, J/token, TTFT p95, blocks-in-use peak, …): trivially
+diffable between commits.
 """
 from __future__ import annotations
 
@@ -13,12 +15,12 @@ import os
 from typing import Dict
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
-BENCH_PATH = os.path.join(OUT_DIR, "BENCH_engine.json")
+BENCH_PATH = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json"))
 
 
 def update_bench_json(section: str, payload: Dict) -> str:
-    """Merge ``payload`` under ``section`` in BENCH_engine.json."""
-    os.makedirs(OUT_DIR, exist_ok=True)
+    """Merge ``payload`` under ``section`` in the root BENCH_engine.json."""
     data: Dict = {}
     if os.path.exists(BENCH_PATH):
         try:

@@ -13,11 +13,16 @@ Acceptance gates printed at the end (and persisted to BENCH_engine.json):
     per tick) ≥ 1.5× the slotted engine's at equal arena bytes;
   * J/token no worse than slotted;
   * open-loop (Poisson) run at 0.7× the measured saturation rate reports
-    finite queueing delay with p95 within the derived SLA.
+    finite queueing delay with p95 within the derived SLA;
+  * PREEMPTION stage (PR 4): an overcommitted arena under mixed-priority
+    Poisson arrivals (background long-decode jobs + interactive shorts) —
+    interactive p95 TTFT with decode-time preemption enabled must be no
+    worse than with the conservative whole-sequence reservation.
 
 Usage:  PYTHONPATH=src python benchmarks/paged_serving.py
             [--layers 4] [--requests 18] [--new-tokens 24] [--slots 4]
             [--block-size 16] [--prompt-lens 16,128,512]
+            [--no-preempt-stage]
 """
 from __future__ import annotations
 
@@ -54,6 +59,8 @@ def main() -> int:
     ap.add_argument("--open-loop-requests", type=int, default=0,
                     help="0 disables the open-loop stage (the slow test "
                          "runs it; closed-loop gates stand alone)")
+    ap.add_argument("--no-preempt-stage", action="store_true",
+                    help="skip the overcommit/preemption TTFT comparison")
     args = ap.parse_args()
 
     import jax.numpy as jnp
@@ -62,6 +69,7 @@ def main() -> int:
     from repro.configs import get_smoke_config
     from repro.core import config_graph as CG
     from repro.serving import engine as ENG
+    from repro.serving.api import InferenceRequest, serve_workload
 
     prompt_lens = [int(x) for x in args.prompt_lens.split(",")]
     base = get_smoke_config(args.arch).with_(n_layers=args.layers,
@@ -81,13 +89,21 @@ def main() -> int:
             p[:args.shared_prefix] = shared
         prompts.append(p)
 
+    def run_once(eng, reqs):
+        serve_workload(eng, reqs)
+        return eng.stats()
+
+    def requests_for(prompts_, n_new):
+        return [InferenceRequest(rid=i, prompt=p, max_new_tokens=n_new)
+                for i, p in enumerate(prompts_)]
+
     def measure(kv_layout):
         kw = dict(n_slots=args.slots, max_len=max_len, kv_layout=kv_layout,
                   block_size=args.block_size, max_seqs=4 * args.slots,
                   chunk_blocks=args.chunk_blocks)
         warm = ENG.RealEngine(family, **kw)                # jit warmup pass
         warm.configure(g)
-        warm.serve(prompts, n_new=args.new_tokens)
+        run_once(warm, requests_for(prompts, args.new_tokens))
         # measure on FRESH engines: compiled fns live on the shared family,
         # but allocator/prefix state starts cold — each rep shows real
         # prefill plus sharing of the common prefix, not a second pass
@@ -96,7 +112,7 @@ def main() -> int:
         for _ in range(args.reps):
             eng = ENG.RealEngine(family, **kw)
             eng.configure(g)
-            m = eng.serve(prompts, n_new=args.new_tokens)
+            m = run_once(eng, requests_for(prompts, args.new_tokens))
             if best is None or m["tokens_per_s"] > best["tokens_per_s"]:
                 best_eng, best = eng, m
         return best_eng, best
@@ -159,19 +175,91 @@ def main() -> int:
             "open_loop_ttft_p95_s": round(mo["ttft_p95_s"], 6),
         })
 
+    ok_preempt = True
+    if not args.no_preempt_stage:
+        # --- preemption stage: overcommitted arena, mixed-priority Poisson -
+        # background jobs (priority 0, long decode) land first and would
+        # monopolize the arena; interactive requests (priority 1, short)
+        # arrive Poisson on top.  Same requests, same priority policy, same
+        # (too small) arena — the only difference is decode-time preemption
+        # vs the conservative whole-sequence reservation.
+        bs = 8
+        bg_new, int_new = 4 * bs, bs
+        # 5 background jobs grow to 5 × 6 = 30 blocks against 24: decode
+        # MUST preempt once the tables fill (the 5th never even admits under
+        # whole-sequence reservation until a completion frees its 6 blocks)
+        n_bg, n_int = 5, 10
+        rng_p = np.random.default_rng(7)
+        arrivals = np.cumsum(rng_p.exponential(0.05, n_int))
+        # ONE workload, drawn once — both arms (and their warmups) serve
+        # byte-identical prompts on the same arrival schedule
+        master = []
+        for i in range(n_bg):
+            master.append(InferenceRequest(
+                rid=i, prompt=rng_p.integers(0, base.vocab_size, size=2 * bs
+                                             ).astype(np.int32),
+                max_new_tokens=bg_new, priority=0, arrival_s=0.0))
+        for i in range(n_int):
+            master.append(InferenceRequest(
+                rid=n_bg + i,
+                prompt=rng_p.integers(0, base.vocab_size, size=bs
+                                      ).astype(np.int32),
+                max_new_tokens=int_new, priority=1,
+                arrival_s=float(arrivals[i])))
+
+        def preempt_requests():
+            import dataclasses as dc
+            return [dc.replace(r, prompt=r.prompt.copy()) for r in master]
+
+        # arena sized so the 4 background whole-sequence reservations
+        # (4 × 6 blocks) consume it EXACTLY: under the conservative scheme
+        # every interactive arrival waits for a background completion, while
+        # preemption admits them immediately and swaps background pages out
+        # under decode pressure
+        overcommit_kw = dict(
+            n_slots=args.slots, max_len=6 * bs + bs, kv_layout="paged",
+            block_size=bs, n_blocks=25, max_seqs=8, policy="priority",
+            prefix_caching=False)
+        ttft = {}
+        pre_count = {}
+        for preempt in (False, True):
+            eng = ENG.RealEngine(family, preemption=preempt, **overcommit_kw)
+            eng.configure(g)
+            serve_workload(eng, preempt_requests())       # warm the shapes
+            eng.configure(g)                              # fresh arena state
+            resp = serve_workload(eng, preempt_requests())
+            inter = [r for r in resp if r.priority == 1]
+            from repro.serving.scheduler import latency_percentile
+            ttft[preempt] = latency_percentile([r.ttft_s for r in inter],
+                                               95.0)
+            pre_count[preempt] = eng.stats()["preemptions"]
+        ok_preempt = ttft[True] <= ttft[False] * 1.05 + 5e-3
+        print(f"  preemption stage (overcommit, priority policy): "
+              f"interactive ttft_p95 reserve={ttft[False] * 1e3:.1f}ms "
+              f"preempt={ttft[True] * 1e3:.1f}ms "
+              f"({pre_count[True]} preemptions)")
+        payload.update({
+            "preempt_ttft_p95_s": round(ttft[True], 6),
+            "reserve_ttft_p95_s": round(ttft[False], 6),
+            "preemptions": int(pre_count[True]),
+        })
+
     jpath = update_bench_json("paged_serving", payload)
     print(f"updated {jpath}")
 
     us = m_p["wall_s"] / max(m_p["tokens"], 1) * 1e6
     print(f"paged_serving,{us:.1f},conc={conc_ratio:.2f}x "
           f"j_ratio={j_ratio:.2f} parity={'OK' if ok_parity else 'FAIL'}")
-    if not (ok_parity and ok_conc and ok_energy):
+    if not (ok_parity and ok_conc and ok_energy and ok_preempt):
         print(f"ACCEPTANCE FAIL: parity={ok_parity} "
               f"concurrency {conc_ratio:.2f}x (need >=1.5) "
-              f"j_ratio {j_ratio:.2f} (need <=1.0)")
+              f"j_ratio {j_ratio:.2f} (need <=1.0) "
+              f"preempt_ttft_ok={ok_preempt}")
         return 1
     print(f"ACCEPTANCE OK: {conc_ratio:.2f}x concurrency, "
-          f"{(1 - j_ratio) * 100:.0f}% lower J/token, token parity exact")
+          f"{(1 - j_ratio) * 100:.0f}% lower J/token, token parity exact"
+          + ("" if args.no_preempt_stage
+             else ", preemption ttft no worse under overcommit"))
     return 0
 
 

@@ -71,6 +71,11 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None)
     ap.add_argument("--fast", action="store_true",
                     help="6 h traces instead of 48 h")
+    ap.add_argument("--json", action="store_true",
+                    help="also merge each benchmark's derived dict into the "
+                         "root-level BENCH_engine.json (via _bench_json), "
+                         "keyed by benchmark name — the cross-PR perf "
+                         "trajectory file")
     args = ap.parse_args(argv)
 
     os.makedirs(OUT_DIR, exist_ok=True)
@@ -89,6 +94,12 @@ def main(argv=None) -> int:
         us = (time.perf_counter() - t0) * 1e6
         with open(os.path.join(OUT_DIR, f"{name}.csv"), "w", newline="") as f:
             csv.writer(f).writerows(rows)
+        if args.json:
+            try:                                   # python -m benchmarks.run
+                from benchmarks._bench_json import update_bench_json
+            except ImportError:                    # python benchmarks/run.py
+                from _bench_json import update_bench_json
+            update_bench_json(name, {**derived, "us_per_call": round(us)})
         print(f"{name},{us:.0f},\"{json.dumps(derived)}\"", flush=True)
     return 1 if failures else 0
 

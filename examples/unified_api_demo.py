@@ -1,0 +1,111 @@
+"""One workload, every backend: the unified request/response serving API.
+
+Builds a two-class fleet workload (interactive Poisson stream + deferrable
+deadline jobs, ``fleet.workload.request_stream``) as typed
+``InferenceRequest``s and drives the SAME requests through every
+``ServingBackend`` implementation:
+
+  * the real continuous-batching engine on the slotted KV cache,
+  * the real engine on the paged arena (priority policy + decode-time
+    preemption enabled),
+  * the per-request DES (FIFO and EDF),
+  * the analytic fluid-window model.
+
+Each backend returns ``InferenceResponse``s carrying per-request latency,
+TTFT, attributed joules and gCO2 (occupancy-weighted tick energy × the
+window CI) and preemption counts; the two real layouts must agree
+token-for-token and every backend's per-request energy must sum to its
+engine total.
+
+Run:  PYTHONPATH=src python examples/unified_api_demo.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+
+def main():
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.core import catalog as CAT
+    from repro.core import config_graph as CG
+    from repro.fleet import workload as WL
+    from repro.serving import engine as ENG
+    from repro.serving.api import ServingBackend, serve_workload, \
+        summarize_responses
+    from repro.serving.backends import FluidBackend
+    from repro.serving.queue import DESBackend, DESConfig
+
+    ci = 380.0
+    base = get_smoke_config("qwen3-1.7b").with_(n_layers=2, dtype=jnp.float32)
+    family = ENG.build_engine_family(base, fracs=(1.0,))
+    g = CG.ConfigGraph.from_dict(base.name, {("x1", 16): 1})
+
+    # a 2-hour fleet workload compressed onto a ~2-second demo clock
+    fleet_wl = WL.make_workload(interactive_rps=2.0, duration_s=2 * 3600.0,
+                                deferrable_frac=0.3, n_jobs=3,
+                                min_slack_s=1800.0, max_slack_s=3600.0,
+                                seed=0)
+    requests = WL.request_stream(fleet_wl, 2 * 3600.0,
+                                 vocab_size=base.vocab_size,
+                                 prompt_lens=(6, 12, 24), n_new=6,
+                                 time_scale=1.0 / 3600.0, max_interactive=10,
+                                 seed=0)
+    n_int = sum(r.slo == "interactive" for r in requests)
+    print(f"=== unified serving API demo: {len(requests)} requests "
+          f"({n_int} interactive + {len(requests) - n_int} deferrable "
+          f"w/ deadlines) ===")
+
+    def fresh_requests():
+        import dataclasses as dc
+        return [dc.replace(r, prompt=r.prompt.copy()) for r in requests]
+
+    backends = {}
+    eng_s = ENG.RealEngine(family, n_slots=4, max_len=48, ci_g_per_kwh=ci)
+    eng_s.configure(g)
+    backends["real/slotted fifo"] = eng_s
+    eng_p = ENG.RealEngine(family, n_slots=4, max_len=48, kv_layout="paged",
+                           block_size=8, max_seqs=8, policy="priority",
+                           preemption=True, ci_g_per_kwh=ci)
+    eng_p.configure(g)
+    backends["real/paged prio+preempt"] = eng_p
+    des_g = CG.ConfigGraph.from_dict("efficientnet", {("B3", 1): 1})
+    variants = CAT.get_family("efficientnet")
+    backends["des fifo"] = DESBackend(des_g, variants,
+                                      DESConfig(jitter_sigma=0.0),
+                                      policy="fifo", ci_g_per_kwh=ci)
+    backends["des edf"] = DESBackend(des_g, variants,
+                                     DESConfig(jitter_sigma=0.0),
+                                     policy="edf", ci_g_per_kwh=ci)
+    backends["fluid"] = FluidBackend(des_g, variants, sla_target_s=1.0,
+                                     window_s=0.5, ci_g_per_kwh=ci)
+
+    print(f"{'backend':24s} {'served':>6s} {'p95_ms':>8s} {'ttft_ms':>8s} "
+          f"{'J':>8s} {'gCO2':>8s} {'miss':>4s} {'preempt':>7s}")
+    results = {}
+    for name, backend in backends.items():
+        assert isinstance(backend, ServingBackend)
+        responses = serve_workload(backend, fresh_requests())
+        s = summarize_responses(responses)
+        total_j = backend.stats().get("energy_j", s["energy_j"])
+        assert abs(s["energy_j"] - total_j) < 1e-6 * max(total_j, 1), \
+            "per-request joules must sum to the engine total"
+        results[name] = responses
+        print(f"{name:24s} {s['served']:6d} {s['p95_s'] * 1e3:8.1f} "
+              f"{s.get('interactive_ttft_p95_s', 0.0) * 1e3:8.1f} "
+              f"{s['energy_j']:8.1f} {s['carbon_g']:8.4f} "
+              f"{s['deadline_misses']:4d} {s['preemptions']:7d}")
+
+    outs_s, outs_p = eng_s.last_outputs, eng_p.last_outputs
+    for rid in outs_s:
+        np.testing.assert_array_equal(outs_s[rid], outs_p[rid])
+    print("\nOK — every backend ran the identical typed workload through "
+          "submit/drain;\nreal slotted and paged outputs are "
+          "token-identical, energy attribution is exact.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Fast pre-push gate: byte-compile everything, then the tier-1 test suite
+# (pytest deselects `slow` via pytest.ini).  Extra args pass to pytest:
+#   scripts/check.sh -k api
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m compileall -q src benchmarks examples tests scripts
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -120,6 +120,9 @@ class FleetConfig:
     engine_max_len: int = 32
     engine_kv_layout: str = "slotted"  # "paged" = kvpool block arena + radix
                                        # prefix cache (PR 3) per region
+    engine_policy: str = "fifo"        # SchedulerPolicy name for the probe
+                                       # engines (serving.policies)
+    engine_preemption: bool = False    # paged decode-time swap-out (PR 4)
     probe_requests: int = 4            # real requests probed per window
     probe_prompt_len: int = 6
     probe_new_tokens: int = 4
@@ -148,6 +151,9 @@ class RegionReport:
     real_p95_s: float = 0.0            # measured engine p95 over all probes
     real_served: int = 0               # real requests actually executed
     real_energy_j: float = 0.0         # measured (occupancy-scaled) energy
+    real_carbon_g: float = 0.0         # per-request attributed gCO2 (probe
+                                       # joules × that window's CI)
+    real_preemptions: int = 0          # paged decode-time swap-outs
     real_reconfig_s: float = 0.0       # total warm-reconfiguration seconds
     real_reconfigs: int = 0
 
@@ -215,7 +221,9 @@ class _Region:
             from repro.serving import engine as ENG
             eng = ENG.RealEngine(engine_family, n_slots=cfg.engine_slots,
                                  max_len=cfg.engine_max_len,
-                                 kv_layout=cfg.engine_kv_layout)
+                                 kv_layout=cfg.engine_kv_layout,
+                                 policy=cfg.engine_policy,
+                                 preemption=cfg.engine_preemption)
             self.server = BK.RealWindowServer(
                 self.ctx.variants, self.acct, self.ctx.obj_cfg.l_tail_s,
                 engine=eng, probe_requests=cfg.probe_requests,
@@ -352,10 +360,11 @@ class _Region:
             self.server.serve_segment(ctrl.config, start, remaining, int_rate,
                                       defer_rps, net_delay_s)
         # real-execution backend: drive this window's active config through
-        # the region's engine and measure a probe batch
+        # the region's engine and measure a probe batch of typed requests
+        # (per-request carbon attributed at this window's CI)
         probe = getattr(self.server, "probe_window", None)
         if probe is not None:
-            probe(ctrl.config)
+            probe(ctrl.config, t)
 
     def rescale(self, t: float, need_rps: float, cfg: FleetConfig) -> None:
         """Size the block count so the assigned load lands near ``scale_rho``
@@ -722,6 +731,8 @@ def run_fleet(family: str, traces: Dict[str, CB.CarbonTrace],
             real_p95_s=getattr(r.server, "real_p95", lambda: 0.0)(),
             real_served=getattr(r.server, "real_served", 0),
             real_energy_j=getattr(r.server, "real_energy_j", 0.0),
+            real_carbon_g=getattr(r.server, "real_carbon_g", 0.0),
+            real_preemptions=getattr(r.server, "real_preemptions", 0),
             real_reconfig_s=getattr(r.server, "reconfig_s_total", 0.0),
             real_reconfigs=getattr(r.server, "n_reconfigs", 0))
     return FleetReport(

@@ -14,7 +14,11 @@ from __future__ import annotations
 
 import dataclasses
 import random
-from typing import List, Sequence
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.api import DEFERRABLE, INTERACTIVE, InferenceRequest
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,3 +78,55 @@ def make_workload(interactive_rps: float, duration_s: float,
         jobs.append(DeferrableJob(f"job{i:02d}", arrival, share * scale,
                                   deadline))
     return FleetWorkload(interactive_rps, tuple(jobs))
+
+
+def request_stream(workload: FleetWorkload, duration_s: float, *,
+                   vocab_size: int, prompt_lens: Sequence[int] = (6,),
+                   n_new: int = 8, time_scale: float = 1.0,
+                   max_interactive: Optional[int] = None,
+                   requests_per_job: int = 2, seed: int = 0
+                   ) -> List[InferenceRequest]:
+    """Materialize the two-class fluid workload as typed
+    :class:`~repro.serving.api.InferenceRequest`s for the unified
+    ``ServingBackend`` protocol — the bridge between the fleet's aggregate
+    arithmetic (rates + deferrable jobs) and per-request backends (real
+    engine, DES).
+
+    Interactive requests arrive Poisson at ``interactive_rps`` (capped at
+    ``max_interactive``) with priority 1; each deferrable job contributes
+    ``requests_per_job`` requests at priority 0 carrying the job's deadline
+    — exactly what EDF and the carbon-aware hold policy key on.
+    ``time_scale`` compresses the fleet's hour-scale clock onto a backend's
+    (e.g. 1/3600 turns a 2 h workload into a 2 s wall-clock demo); request
+    ids are dense and unique across both classes."""
+    rng = np.random.default_rng(seed)
+    reqs: List[InferenceRequest] = []
+    rid = 0
+    n_int = int(workload.interactive_rps * duration_s)
+    if max_interactive is not None:
+        n_int = min(n_int, max_interactive)
+    if n_int > 0:
+        # Poisson arrivals conditioned on the count: uniform order stats
+        arrivals = np.sort(rng.uniform(0.0, duration_s, size=n_int))
+        for a in arrivals:
+            reqs.append(InferenceRequest(
+                rid=rid, prompt=rng.integers(
+                    0, vocab_size,
+                    size=int(prompt_lens[rid % len(prompt_lens)])
+                ).astype(np.int32),
+                max_new_tokens=n_new, slo=INTERACTIVE, priority=1,
+                arrival_s=float(a) * time_scale))
+            rid += 1
+    for job in workload.jobs:
+        for _ in range(requests_per_job):
+            reqs.append(InferenceRequest(
+                rid=rid, prompt=rng.integers(
+                    0, vocab_size,
+                    size=int(prompt_lens[rid % len(prompt_lens)])
+                ).astype(np.int32),
+                max_new_tokens=n_new, slo=DEFERRABLE, priority=0,
+                arrival_s=float(job.arrival_s) * time_scale,
+                deadline_s=float(job.deadline_s) * time_scale))
+            rid += 1
+    reqs.sort(key=lambda r: (r.arrival_s, r.rid))
+    return reqs

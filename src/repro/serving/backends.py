@@ -10,19 +10,26 @@ re-optimization, warm reconfiguration, slot-level continuous batching,
 measured latencies and energy — against actual JAX execution instead of the
 fluid model alone.
 
-``RealWindowServer`` keeps the FluidServer bookkeeping (capacity, backlog,
-SLA windows) and adds, per serving window:
+Both region backends speak the unified request/response API
+(``serving.api``):
 
-  * the controller's active config is applied to the region's engine via the
-    warm ``configure`` path (attached to ``Controller.on_config_change``, so
-    reconfigurations flow through ``Controller.maybe_reoptimize`` exactly as
-    on a pod);
-  * a probe batch of real requests runs through the slotted engine,
-    recording measured wall latencies, tokens and occupancy-scaled energy.
+  * ``RealWindowServer`` keeps the FluidServer bookkeeping (capacity,
+    backlog, SLA windows) and, per serving window, applies the controller's
+    active config through the warm ``configure`` path and runs a probe
+    batch of typed ``InferenceRequest``s through the engine — the engine's
+    ``ci_g_per_kwh`` is set to the window's carbon intensity first, so
+    every probe response carries its attributed gCO2;
+  * ``FluidBackend`` wraps the analytic ``FluidServer`` in the
+    ``ServingBackend`` protocol (submit/step/drain/stats): requests
+    aggregate into per-window arrival rates, responses come back with the
+    window's p95 as their latency and an equal share of the window's
+    energy/carbon — the cheapest member of the three-backend family
+    (real slotted / real paged / DES / fluid) that one workload script can
+    sweep.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -30,6 +37,8 @@ from repro.core import carbon as CB
 from repro.core import config_graph as CG
 from repro.core.catalog import Variant
 from repro.serving import simulator as SIM
+from repro.serving.api import DEFERRABLE, DONE, INTERACTIVE, \
+    InferenceRequest, InferenceResponse, serve_workload
 from repro.serving.scheduler import latency_percentile
 
 
@@ -62,11 +71,14 @@ class RealWindowServer(SIM.FluidServer):
         self._rng = np.random.default_rng(seed)
         self._vocab = next(iter(engine.family.values())).cfg.vocab_size
         self._configured_edges = None
+        self._rid = 0
         # measured, real-execution stats
         self.real_latencies: List[float] = []
         self.real_served = 0
         self.real_tokens = 0
         self.real_energy_j = 0.0
+        self.real_carbon_g = 0.0       # per-request attributed, window CI
+        self.real_preemptions = 0
         self.real_occupancy: List[float] = []
         self.reconfig_s_total = 0.0
         self.n_reconfigs = 0
@@ -82,25 +94,137 @@ class RealWindowServer(SIM.FluidServer):
         self._configured_edges = g.edges
 
     # --- real probe ----------------------------------------------------------
-    def probe_window(self, g: CG.ConfigGraph) -> Optional[Dict[str, float]]:
-        """Serve a probe batch of real requests under the active config and
-        record measured latency/energy.  Returns the engine metrics (None
-        for a suspended region)."""
+    def probe_window(self, g: CG.ConfigGraph,
+                     t: float = 0.0) -> Optional[Dict[str, float]]:
+        """Serve a probe batch of typed requests under the active config and
+        record measured latency/energy plus per-request carbon attributed at
+        the window's CI.  Returns the engine stats (None for a suspended
+        region)."""
         if g.total_chips == 0:
             return None
         self.apply_config(g)
-        prompts = [self._rng.integers(0, self._vocab,
-                                      size=(1, self.prompt_len)
-                                      ).astype(np.int32)
-                   for _ in range(self.probe_requests)]
-        m = self.engine.serve(prompts, n_new=self.n_new)
+        self.engine.ci_g_per_kwh = self.acct.trace.at(t)
+        reqs = []
+        for _ in range(self.probe_requests):
+            reqs.append(InferenceRequest(
+                rid=self._rid,
+                prompt=self._rng.integers(0, self._vocab,
+                                          size=(self.prompt_len,)
+                                          ).astype(np.int32),
+                max_new_tokens=self.n_new))
+            self._rid += 1
+        responses = serve_workload(self.engine, reqs)
+        m = self.engine.stats()
         self.real_latencies.extend(self.engine.last_latencies)
         self.real_served += int(m["served"])
         self.real_tokens += int(m["tokens"])
         self.real_energy_j += m["energy_j"]
+        self.real_carbon_g += sum(r.carbon_g for r in responses)
+        self.real_preemptions += int(m.get("preemptions", 0))
         self.real_occupancy.append(m["mean_occupancy"])
         return m
 
     def real_p95(self) -> float:
         return (latency_percentile(self.real_latencies, 95.0)
                 if self.real_latencies else 0.0)
+
+
+class FluidBackend:
+    """The analytic fluid-window model behind the ``ServingBackend``
+    protocol.
+
+    Requests aggregate into per-window arrival rates split by SLO class
+    (interactive vs deferrable — deferrable work only consumes leftover
+    window capacity, exactly the FluidServer contract); completions drain
+    FIFO from each class's pending queue as the window's fluid service
+    allows.  A response's latency is its completion window's p95 (+ the
+    backlog wait already folded in by the model); its energy/carbon is an
+    equal share of that window's power × duration at the window's CI.  No
+    tokens are generated."""
+
+    def __init__(self, g: CG.ConfigGraph, variants: Sequence[Variant],
+                 sla_target_s: float, trace: Optional[CB.CarbonTrace] = None,
+                 window_s: float = 60.0, ci_g_per_kwh: float = 0.0):
+        self.g = g
+        self.window_s = window_s
+        if trace is None:
+            trace = CB.CarbonTrace("flat", np.array([0.0, 365 * 24 * 3600.0]),
+                                   np.array([ci_g_per_kwh, ci_g_per_kwh]))
+        self.acct = CB.CarbonAccountant(trace)
+        self.server = SIM.FluidServer(variants, self.acct, sla_target_s)
+        self.now = 0.0
+        self._pending: Dict[str, List[InferenceRequest]] = {
+            INTERACTIVE: [], DEFERRABLE: []}
+        self._arrived: Dict[str, int] = {INTERACTIVE: 0, DEFERRABLE: 0}
+        self._all: List[InferenceRequest] = []
+        self._released: set = set()
+        self._responses: List[InferenceResponse] = []
+        self._stats: Dict[str, float] = {}
+
+    # --- protocol ------------------------------------------------------------
+    def submit(self, req: InferenceRequest) -> None:
+        self._all.append(req)
+
+    def step(self) -> List[InferenceResponse]:
+        """Serve one fluid window: release arrivals due by its end, serve
+        the two-class rates through ``FluidServer.serve_segment``, complete
+        as much pending work as the window's fluid service covered."""
+        t0, t1 = self.now, self.now + self.window_s
+        for req in self._all:
+            if (req.arrival_s or 0.0) < t1 and req.rid not in self._released:
+                self._released.add(req.rid)
+                self._pending[req.slo].append(req)
+                self._arrived[req.slo] += 1
+        rates = {slo: self._arrived[slo] / self.window_s
+                 for slo in self._arrived}
+        self._arrived = {INTERACTIVE: 0, DEFERRABLE: 0}
+        seg = self.server.serve_segment(self.g, t0, self.window_s,
+                                        rates[INTERACTIVE],
+                                        rates[DEFERRABLE])
+        self.now = t1
+        out: List[InferenceResponse] = []
+        n_done = (int(round(seg.served)) + int(round(seg.defer_served)))
+        window_j = seg.res.power_w * self.window_s
+        share_j = window_j / max(n_done, 1)
+        ci = seg.ci
+        for slo, served in ((INTERACTIVE, int(round(seg.served))),
+                            (DEFERRABLE, int(round(seg.defer_served)))):
+            q = self._pending[slo]
+            for req in q[:served]:
+                lat = seg.p95_s
+                out.append(InferenceResponse(
+                    rid=req.rid, tokens=None, slo=req.slo,
+                    priority=req.priority, state=DONE,
+                    t_arrival=req.arrival_s or 0.0, t_finish=t1,
+                    queue_delay_s=max(lat, 0.0), ttft_s=lat, latency_s=lat,
+                    energy_j=share_j, carbon_g=share_j / 3.6e6 * ci,
+                    accuracy=seg.res.accuracy, deadline_s=req.deadline_s))
+            del q[:served]
+        self._responses.extend(out)
+        return out
+
+    def drain(self) -> List[InferenceResponse]:
+        limit = 10_000                     # windows; the fluid model always
+        while limit and (any(self._pending.values())
+                         or len(self._released) < len(self._all)):
+            self.step()                    # converges — backlog is served
+            limit -= 1                     # at capacity every window
+        self._stats = {
+            "served": len(self._responses),
+            "p95_s": self.server.weighted_p95(),
+            "mean_accuracy": self.server.mean_accuracy,
+            # attributed totals: sums of the per-response shares, so the
+            # joules-sum / carbon = J × CI contract holds for this backend
+            # too.  The accountant's trace total (which also counts windows
+            # that completed nothing) is reported separately.
+            "energy_j": sum(r.energy_j for r in self._responses),
+            "carbon_g": sum(r.carbon_g for r in self._responses),
+            "trace_carbon_g": self.acct.carbon_g,
+            "wall_s": self.now,
+            "sla_violation_frac": self.server.sla_violation_frac,
+            "preemptions": 0,
+        }
+        return list(self._responses)
+
+    def stats(self) -> Dict[str, float]:
+        return dict(self._stats)

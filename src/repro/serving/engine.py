@@ -1,5 +1,5 @@
 """Real-execution serving engine: continuous batching over slotted or PAGED
-KV caches.
+KV caches, driven through the unified request/response API.
 
 This is the end-to-end validation path for Clover on this CPU container: the
 variants are reduced-config LMs (a real quality ladder — fewer layers →
@@ -24,31 +24,51 @@ Two KV layouts share the serving loop (``RealEngine(kv_layout=...)``):
     stall behind a long admission), and attention gathers K/V through block
     tables (``kernels/paged_attention.py``; ``kernels/ref.py`` on CPU).
 
-Shared serving machinery:
+The serving surface is the ``ServingBackend`` protocol (``serving.api``):
+``submit`` typed :class:`InferenceRequest`s, ``step`` one scheduler tick,
+``drain`` to completion, ``stats`` for the session aggregates.  On top:
 
-  * one-pass prefill (no teacher-forcing replay), single jitted batched
-    decode step per tick, free rows ride along for static shapes;
-  * event-driven FIFO admission mid-flight through the core shared with the
-    DES (``serving.scheduler.SchedulerCore``) — ``peek_next`` lets block-
-    aware admission inspect the head request without losing its FIFO slot;
-  * **open-loop serving**: ``serve(..., arrival_s=...)`` releases requests
-    on a wall-clock arrival schedule (``serve_poisson`` draws one), so
-    queueing delay and TTFT are measured at sub-saturation loads instead of
-    only closed-batch makespan;
+  * **pluggable admission** (``serving.policies``): FIFO (bit-identical to
+    the PR 2/3 behavior), priority, EDF over deadlines, and the carbon-aware
+    two-class policy, all layered on the shared ``SchedulerCore``.  A failed
+    block-aware admission is **gated**: the engine only re-attempts once the
+    instance's free capacity (slots / free+evictable blocks) or the queue
+    head actually changed, instead of re-peeking every tick;
+  * **per-request attribution**: every decode tick's occupancy-scaled energy
+    is split over the rows that held the batch, prefill chunks are charged
+    to the prefilling request, the session's idle floor is spread across its
+    responses — so per-request joules sum to the engine total, and
+    ``carbon_g = joules × ci_g_per_kwh`` is a per-request quantity the fleet
+    layer can aggregate (EcoServe-style attribution);
+  * **paged preemption** (``preemption=True``): admission reserves only the
+    prompt's blocks and decode grows block tables on demand; when the arena
+    runs dry mid-decode the engine victim-selects the lowest-priority /
+    youngest sequence, swaps its K/V blocks to HOST memory, re-queues it,
+    and restores it bit-exactly on re-admission — greedy outputs are
+    preemption-invariant, replacing the conservative whole-sequence
+    reservation;
+  * ``RealEngine.serve(prompts=...)`` survives as a one-PR deprecation shim
+    over the request path (token-identical, ``DeprecationWarning``);
+  * **open-loop serving**: requests with ``arrival_s`` release on a wall-
+    clock schedule (``serve_poisson`` draws one), so queueing delay and TTFT
+    are measured at sub-saturation loads instead of only closed-batch
+    makespan;
   * energy per decode tick scales with row occupancy
     (``PM.instance_power_w(chips, occupied / capacity)``); prefill work is
     charged at full busy power; unaccounted wall time draws idle power;
   * ``configure`` is **warm**: instances pool by (variant, chips) and jitted
     functions live on the ``EngineVariant``; ``warmup`` compiles exactly the
-    shape set ``serve`` can reach (``serve_buckets``) so a probe window's
-    first token never pays a trace.
+    shape set the serve loop can reach (``serve_buckets``) so a probe
+    window's first token never pays a trace.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
+import warnings
 from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -58,7 +78,9 @@ from repro.core import perf_model as PM
 from repro.core.catalog import Variant
 from repro.models import registry as R
 from repro.models.config import ModelConfig
+from repro.serving.api import DONE, InferenceRequest, InferenceResponse
 from repro.serving.kvpool import BlockAllocator, RadixPrefixCache
+from repro.serving.policies import SchedulerPolicy, make_policy
 from repro.serving.scheduler import SchedulerCore, latency_percentile
 
 __all__ = ["latency_percentile", "EngineVariant", "build_engine_family",
@@ -165,9 +187,10 @@ def _bucket_ladder(cap: int) -> List[int]:
 
 
 def serve_buckets(max_len: int) -> List[int]:
-    """Every prompt bucket ``serve`` can reach on a cache of ``max_len``:
-    admitted prompts have ``true_len <= max_len - n_new <= max_len - 1``, so
-    the reachable set is exactly ``{_bucket(n) for n in 1..max_len-1}``.
+    """Every prompt bucket the serve loop can reach on a cache of
+    ``max_len``: admitted prompts have ``true_len <= max_len - n_new <=
+    max_len - 1``, so the reachable set is exactly
+    ``{_bucket(n) for n in 1..max_len-1}``.
 
     ``Instance.warmup`` compiles precisely this set — a missed bucket means
     the first real request at that length pays a jit trace (polluting a
@@ -192,14 +215,50 @@ class _SlotState:
     remaining: int                 # decode steps still to run
     tokens: List[int]              # generated token ids (prefill token first)
     t_first: Optional[float] = None   # wall time of the first generated token
+    priority: int = 0
+    preempts: int = 0              # slotted sequences never preempt (uniform
+                                   # field so the engine reads one shape)
+
+
+@dataclasses.dataclass
+class _SwapState:
+    """Host-side image of a preempted paged sequence: everything needed to
+    restore it bit-exactly — request identity, generated tokens, the next
+    decode token, and the K/V contents of the blocks it held (``n_ctx``
+    valid positions).  Restoring writes the pages back into freshly
+    allocated arena blocks, so greedy decode continues on identical state
+    and outputs are preemption-invariant."""
+    rid: int
+    t_arrival: float
+    prompt: np.ndarray
+    n_new: int
+    priority: int
+    tokens: List[int]
+    remaining: int
+    n_ctx: int                     # K/V positions already in the arena
+    next_token: int
+    t_first: Optional[float]
+    cached_tokens: int
+    preempts: int
+    host_k: np.ndarray             # (L, n_blocks_used, bs, K, dh)
+    host_v: np.ndarray
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.host_k.shape[1])
 
 
 def _tick_info(prefill_s: float = 0.0, decode_s: float = 0.0,
                decode_steps: int = 0, occupied: int = 0,
-               blocks_in_use: int = 0) -> Dict[str, float]:
+               blocks_in_use: int = 0, prefill_rids=None, decode_rids=None,
+               emitted=None, preempted=None) -> Dict[str, object]:
     return {"prefill_s": prefill_s, "decode_s": decode_s,
             "decode_steps": decode_steps, "occupied": occupied,
-            "blocks_in_use": blocks_in_use}
+            "blocks_in_use": blocks_in_use,
+            "prefill_rids": prefill_rids or [],   # [(rid, seconds), ...]
+            "decode_rids": decode_rids or [],     # rows sharing the decode
+            "emitted": emitted or [],             # [(rid, token), ...]
+            "preempted": preempted or []}         # [_SwapState, ...]
 
 
 class Instance:
@@ -227,7 +286,7 @@ class Instance:
         self._next[:] = 0
 
     def warmup(self) -> None:
-        """Trigger jit compilation at EXACTLY the shapes ``serve`` can
+        """Trigger jit compilation at EXACTLY the shapes the serve loop can
         reach — every prompt bucket from ``serve_buckets`` plus one decode
         step — so cold ``configure`` bears the whole compile cost and the
         first real request never re-jits (a probe window's measured
@@ -265,6 +324,11 @@ class Instance:
     def busy(self) -> bool:
         return self.occupied > 0
 
+    def admission_signature(self) -> Tuple:
+        """Free-capacity fingerprint for admission gating: a failed admission
+        is only re-attempted once this changes (a slot was freed)."""
+        return (len(self.free_slots()),)
+
     # --- serving -------------------------------------------------------------
     def can_admit(self, prompt_len: int, n_new: int) -> bool:
         assert prompt_len + n_new <= self.max_len, \
@@ -272,17 +336,20 @@ class Instance:
         return any(s is None for s in self.slots)
 
     def admit_next(self, rid: int, t_arrival: float, prompt: np.ndarray,
-                   n_new: int) -> Tuple[_SlotState, float]:
+                   n_new: int, priority: int = 0
+                   ) -> Tuple[_SlotState, float]:
         """Admit into the first free slot; returns (state, prefill seconds)
         — the engine charges prefill at full busy power."""
         slot = self.free_slots()[0]
         t1 = time.perf_counter()
-        state = self.admit(slot, rid, t_arrival, prompt, n_new)
+        state = self.admit(slot, rid, t_arrival, prompt, n_new,
+                           priority=priority)
         state.t_first = time.perf_counter()
         return state, state.t_first - t1
 
     def admit(self, slot: int, rid: int, t_arrival: float,
-              prompt: np.ndarray, n_new: int) -> _SlotState:
+              prompt: np.ndarray, n_new: int, priority: int = 0
+              ) -> _SlotState:
         """One-pass prefill of ``prompt`` into ``slot``.  The prompt's
         last-position logits yield the first generated token immediately —
         the prefill forward is never discarded."""
@@ -302,43 +369,47 @@ class Instance:
                                v_all[:, :, :write], slot, true_len)
         first = int(jnp.argmax(logits[0, true_len - 1]))
         state = _SlotState(rid, t_arrival, remaining=n_new - 1,
-                           tokens=[first])
+                           tokens=[first], priority=priority)
         self._next[slot, 0] = first
         if state.remaining > 0:
             self.slots[slot] = state
         return state
 
-    def step(self) -> List[_SlotState]:
-        """One batched decode step over ALL slots; returns the requests that
-        completed on this step (their slots are freed for mid-flight
-        admission)."""
+    def step(self) -> Tuple[List[_SlotState], List[Tuple[int, int]]]:
+        """One batched decode step over ALL slots; returns (completed
+        requests — their slots are freed for mid-flight admission — and the
+        (rid, token) emissions of every active row for streaming)."""
         active = np.array([s is not None for s in self.slots])
         logits, self.cache = self._fns["decode"](
             self.ev.params, self.cache, jnp.asarray(self._next),
             jnp.asarray(active))
         toks = np.asarray(jnp.argmax(logits, axis=-1))
         finished: List[_SlotState] = []
+        emitted: List[Tuple[int, int]] = []
         for i, s in enumerate(self.slots):
             if s is None:
                 continue
             s.tokens.append(int(toks[i]))
+            emitted.append((s.rid, int(toks[i])))
             s.remaining -= 1
             self._next[i, 0] = int(toks[i])
             if s.remaining <= 0:
                 finished.append(s)
                 self.slots[i] = None
-        return finished
+        return finished, emitted
 
-    def tick(self) -> Tuple[List[_SlotState], Dict[str, float]]:
+    def tick(self) -> Tuple[List[_SlotState], Dict[str, object]]:
         """One scheduler tick = one batched decode step (slotted prefill
         runs at admission)."""
         occ = self.occupied
         if occ == 0:
             return [], _tick_info()
+        rids = [s.rid for s in self.slots if s is not None]
         t1 = time.perf_counter()
-        finished = self.step()
+        finished, emitted = self.step()
         dt = time.perf_counter() - t1
-        return finished, _tick_info(decode_s=dt, decode_steps=1, occupied=occ)
+        return finished, _tick_info(decode_s=dt, decode_steps=1, occupied=occ,
+                                    decode_rids=rids, emitted=emitted)
 
     def generate(self, prompt: np.ndarray, n_new: int = 8
                  ) -> Tuple[np.ndarray, float]:
@@ -393,6 +464,8 @@ class _PagedSeq:
     remaining: int = 0
     tokens: List[int] = dataclasses.field(default_factory=list)
     t_first: Optional[float] = None
+    priority: int = 0
+    preempts: int = 0               # times this sequence was swapped out
 
     @property
     def prefilled(self) -> bool:
@@ -407,12 +480,20 @@ class PagedInstance:
     blocks, minus whatever the radix prefix cache already has.  The decode
     batch is ``max_seqs`` static rows; admission is bounded by *blocks*, not
     rows — short prompts pack far more concurrency into the same arena than
-    the slotted cache's per-slot ``max_len`` reservation."""
+    the slotted cache's per-slot ``max_len`` reservation.
+
+    With ``preemption=True`` the whole-sequence reservation is dropped:
+    admission reserves only the PROMPT's blocks and decode grows each
+    sequence's table on demand; when the arena runs dry mid-decode the
+    lowest-priority / youngest sequence is swapped out to host memory
+    (``_SwapState``) for the engine to re-queue and later restore
+    bit-exactly."""
 
     def __init__(self, ev: EngineVariant, chips: int, n_blocks: int,
                  block_size: int = 16, max_seqs: int = 8, max_len: int = 96,
                  chunk_blocks: int = 2, prefix_caching: bool = True,
-                 cache_watermark: float = 0.25, chunk_burst: int = 4):
+                 cache_watermark: float = 0.25, chunk_burst: int = 4,
+                 preemption: bool = False):
         self.ev = ev
         self.chips = chips
         self.block_size = block_size
@@ -427,6 +508,7 @@ class PagedInstance:
         # and LRU eviction under full-arena pressure throws away exactly
         # the chains the next FIFO request was about to hit (cache thrash)
         self.cache_watermark = cache_watermark
+        self.preemption = preemption
         self._fns = _paged_fns(ev)
         self.arena = R.make_block_arena(ev.cfg, n_blocks, block_size,
                                         dtype=jnp.float32)
@@ -440,6 +522,7 @@ class PagedInstance:
         self._prefillq: Deque[_PagedSeq] = deque()
         self.prefill_chunks = 0
         self.prefix_hit_tokens = 0
+        self.preemptions = 0
 
     # --- lifecycle -----------------------------------------------------------
     def reset(self) -> None:
@@ -455,8 +538,8 @@ class PagedInstance:
         self._prefillq.clear()
 
     def warmup(self) -> None:
-        """Compile every shape ``serve`` can reach: the (single) fixed-size
-        prefill chunk plus one decode per power-of-two row bucket
+        """Compile every shape the serve loop can reach: the (single)
+        fixed-size prefill chunk plus one decode per power-of-two row bucket
         (``_row_buckets`` — the batch-axis analogue of ``serve_buckets``).
         ``true_c = 0`` / an all-False mask route every warmup write to the
         junk block, so logical state is untouched."""
@@ -486,24 +569,39 @@ class PagedInstance:
     def busy(self) -> bool:
         return self.occupied > 0
 
+    def _avail_blocks(self) -> int:
+        return self.alloc.num_free + (self.prefix.evictable_blocks()
+                                      if self.prefix else 0)
+
+    def admission_signature(self) -> Tuple:
+        """Free-capacity fingerprint for admission gating: a failed
+        block-aware admission is only re-attempted once the allocator state
+        (free list OR any refcount — the prefix tree's evictable set is a
+        pure function of refcounts) or a batch row changed.  The allocator
+        ``version`` makes this O(1): re-peeking + re-walking the evictable
+        set every tick when nothing was freed is pure waste."""
+        return (sum(1 for s in self.rows if s is None), self.alloc.version)
+
     def can_admit(self, prompt_len: int, n_new: int) -> bool:
         """Admission control by BLOCK availability: a free batch row plus
-        enough free-or-evictable blocks for the worst case (no prefix hit —
-        a hit at admit time only reduces the real need)."""
+        enough free-or-evictable blocks.  Without preemption the worst case
+        (no prefix hit) of the WHOLE sequence is reserved; with preemption
+        only the prompt needs to fit now — decode grows on demand and block
+        pressure is resolved by swapping victims out."""
         assert prompt_len + n_new <= self.max_len, \
             f"prompt {prompt_len} + n_new {n_new} > max_len {self.max_len}"
-        need = self.alloc.blocks_for_tokens(prompt_len + n_new)
+        reserve = prompt_len if self.preemption else prompt_len + n_new
+        need = self.alloc.blocks_for_tokens(reserve)
         assert need <= self.alloc.num_allocatable, \
             f"request needs {need} blocks > arena {self.alloc.num_allocatable}"
         if all(s is not None for s in self.rows):
             return False
-        avail = self.alloc.num_free + (self.prefix.evictable_blocks()
-                                       if self.prefix else 0)
-        return avail >= need
+        return self._avail_blocks() >= need
 
     # --- admission -----------------------------------------------------------
     def admit_next(self, rid: int, t_arrival: float, prompt: np.ndarray,
-                   n_new: int) -> Tuple[_PagedSeq, float]:
+                   n_new: int, priority: int = 0
+                   ) -> Tuple[_PagedSeq, float]:
         """Reserve blocks + a batch row; NO forward pass happens here —
         prefill is chunked across subsequent ticks (so admission never
         stalls sequences that are already decoding).  Shared prompt-prefix
@@ -515,13 +613,14 @@ class PagedInstance:
         n_cached = 0
         if self.prefix is not None:
             matched, n_cached = self.prefix.match(prompt)
-        need = self.alloc.blocks_for_tokens(true_len + n_new) - len(matched)
+        reserve = true_len if self.preemption else true_len + n_new
+        need = self.alloc.blocks_for_tokens(reserve) - len(matched)
         if need > self.alloc.num_free and self.prefix is not None:
             self.prefix.evict(need - self.alloc.num_free)
         blocks = matched + self.alloc.alloc(need)
         seq = _PagedSeq(rid, t_arrival, prompt, n_new, row, blocks,
                         n_done=n_cached, cached_tokens=n_cached,
-                        remaining=n_new)
+                        remaining=n_new, priority=priority)
         self.tables[row, :len(blocks)] = blocks
         self.tables[row, len(blocks):] = 0
         self.lengths[row] = 0            # row inactive until prefill completes
@@ -531,14 +630,109 @@ class PagedInstance:
         self.prefix_hit_tokens += n_cached
         return seq, 0.0
 
+    # --- preemption / swap ---------------------------------------------------
+    def can_resume(self, swap: _SwapState) -> bool:
+        """Re-admission check for a swapped-out sequence: a free row plus
+        its saved block count (decode re-grows past that on demand)."""
+        if all(s is not None for s in self.rows):
+            return False
+        return self._avail_blocks() >= swap.n_blocks
+
+    def resume(self, swap: _SwapState) -> Tuple[_PagedSeq, float]:
+        """Restore a preempted sequence: fresh blocks, the host K/V pages
+        written back, lengths/next-token exactly as at swap-out — greedy
+        decode continues on bit-identical state."""
+        row = self.rows.index(None)
+        nb = swap.n_blocks
+        if nb > self.alloc.num_free and self.prefix is not None:
+            self.prefix.evict(nb - self.alloc.num_free)
+        blocks = self.alloc.alloc(nb)
+        idx = jnp.asarray(np.asarray(blocks, np.int32))
+        self.arena["k"] = self.arena["k"].at[:, idx].set(
+            jnp.asarray(swap.host_k))
+        self.arena["v"] = self.arena["v"].at[:, idx].set(
+            jnp.asarray(swap.host_v))
+        seq = _PagedSeq(swap.rid, swap.t_arrival, swap.prompt, swap.n_new,
+                        row, blocks, n_done=len(swap.prompt),
+                        cached_tokens=swap.cached_tokens,
+                        remaining=swap.remaining, tokens=list(swap.tokens),
+                        t_first=swap.t_first, priority=swap.priority,
+                        preempts=swap.preempts)
+        self.tables[row, :nb] = blocks
+        self.tables[row, nb:] = 0
+        self.lengths[row] = swap.n_ctx
+        self._next[row, 0] = swap.next_token
+        self.rows[row] = seq
+        return seq, 0.0
+
+    def _select_victim(self, exclude: _PagedSeq) -> Optional[_PagedSeq]:
+        """Preemption victim: lowest priority first, youngest (latest
+        arrival) within a level; only fully-prefilled decoding sequences
+        qualify (mid-prefill rows sit in the prefill queue)."""
+        cands = [s for s in self.rows
+                 if s is not None and s.prefilled and s.remaining > 0
+                 and s is not exclude]
+        if not cands:
+            return None
+        return min(cands, key=lambda s: (s.priority, -s.t_arrival))
+
+    def _swap_out(self, seq: _PagedSeq) -> _SwapState:
+        """Swap a sequence's K/V pages to host memory and release its arena
+        blocks + batch row.  The engine re-queues the returned image."""
+        n_ctx = int(self.lengths[seq.row])
+        nb = self.alloc.blocks_for_tokens(max(n_ctx, 1))
+        used = np.asarray(seq.blocks[:nb], np.int32)
+        swap = _SwapState(
+            rid=seq.rid, t_arrival=seq.t_arrival, prompt=seq.prompt,
+            n_new=seq.n_new, priority=seq.priority, tokens=list(seq.tokens),
+            remaining=seq.remaining, n_ctx=n_ctx,
+            next_token=int(self._next[seq.row, 0]), t_first=seq.t_first,
+            cached_tokens=seq.cached_tokens, preempts=seq.preempts + 1,
+            host_k=np.asarray(self.arena["k"][:, used]),
+            host_v=np.asarray(self.arena["v"][:, used]))
+        self.alloc.free(seq.blocks)      # decref: prefix-tree refs survive
+        self._clear_row(seq)
+        self.preemptions += 1
+        return swap
+
+    def _ensure_decode_capacity(self) -> List[_SwapState]:
+        """Pre-decode pass under ``preemption=True``: grow every decoding
+        row's block table to cover its next token write, swapping out
+        victims when the arena (free list + evictable prefix blocks) runs
+        dry.  Restarts after every mutation — ``_compact`` reshuffles rows,
+        so cached indices would go stale."""
+        swapped: List[_SwapState] = []
+        while True:
+            needy = None
+            for i, s in enumerate(self.rows):
+                if (s is not None and s.prefilled and s.remaining > 0
+                        and self.alloc.blocks_for_tokens(
+                            int(self.lengths[i]) + 1) > len(s.blocks)):
+                    needy = s
+                    break
+            if needy is None:
+                return swapped
+            if self.alloc.num_free < 1 and self.prefix is not None:
+                self.prefix.evict(1)
+            if self.alloc.num_free >= 1:
+                bid = self.alloc.alloc(1)[0]
+                needy.blocks.append(bid)
+                self.tables[needy.row, len(needy.blocks) - 1] = bid
+                continue
+            victim = self._select_victim(exclude=needy) or needy
+            swapped.append(self._swap_out(victim))
+
     def _release(self, seq: _PagedSeq) -> None:
         self.alloc.free(seq.blocks)      # decref: prefix-tree refs survive
+        self._clear_row(seq)
+        self._enforce_watermark()
+
+    def _clear_row(self, seq: _PagedSeq) -> None:
         self.rows[seq.row] = None
         self.tables[seq.row, :] = 0
         self.lengths[seq.row] = 0
         self._next[seq.row, 0] = 0
         self._compact(seq.row)
-        self._enforce_watermark()
 
     def _compact(self, hole: int) -> None:
         """Keep occupied rows a contiguous prefix: move the highest occupied
@@ -616,7 +810,7 @@ class PagedInstance:
         return sum(1 for s in self.rows
                    if s is not None and s.prefilled and s.remaining > 0)
 
-    def tick(self) -> Tuple[List[_PagedSeq], Dict[str, float]]:
+    def tick(self) -> Tuple[List[_PagedSeq], Dict[str, object]]:
         """One scheduler tick: an adaptive prefill budget, then one batched
         decode step over all decoding rows.
 
@@ -627,9 +821,10 @@ class PagedInstance:
         so a 512-token admission interleaves with running decodes instead
         of pausing them for its whole prefill."""
         finished: List[_PagedSeq] = []
+        emitted: List[Tuple[int, int]] = []
+        prefill_rids: List[Tuple[int, float]] = []
         prefill_s = 0.0
         if self._prefillq:
-            t1 = time.perf_counter()
             burst = 0
             while self._prefillq:
                 if burst >= self.chunk_burst:
@@ -638,23 +833,34 @@ class PagedInstance:
                         1, min(self.occupied, self.max_seqs // 2)):
                     break                        # decode is busy: yield
                 seq = self._prefillq[0]
+                tc = time.perf_counter()
                 self._prefill_chunk(seq)
+                dtc = time.perf_counter() - tc
+                prefill_rids.append((seq.rid, dtc))
+                prefill_s += dtc
                 burst += 1
                 if seq.prefilled:
+                    emitted.append((seq.rid, seq.tokens[-1]))
                     self._prefillq.popleft()
                     if seq.remaining <= 0:       # n_new == 1
                         finished.append(seq)
                         self._release(seq)
-            prefill_s = time.perf_counter() - t1
+        # decode-time block pressure: grow tables on demand, swap victims
+        # out when the arena is dry (PREEMPTED lifecycle state)
+        preempted = self._ensure_decode_capacity() if self.preemption else []
         active = np.array([s is not None and s.prefilled and s.remaining > 0
                            for s in self.rows])
         decode_s = 0.0
         occ = int(active.sum())
+        decode_rids: List[int] = []
         if occ:
             # occupied rows are a compact prefix (see _compact): decode over
             # the smallest power-of-two row bucket covering them, so 5 live
             # sequences cost 8 rows of gather+compute, not max_seqs
             B = _pow2_bucket(self.occupied, self.max_seqs)
+            decode_rids = [s.rid for s in self.rows[:B]
+                           if s is not None and s.prefilled
+                           and s.remaining > 0]
             t1 = time.perf_counter()
             logits, self.arena = self._fns["decode_paged"](
                 self.ev.params, self.arena, jnp.asarray(self._next[:B]),
@@ -667,6 +873,7 @@ class PagedInstance:
                 if not active[i]:
                     continue
                 s.tokens.append(int(toks[i]))
+                emitted.append((s.rid, int(toks[i])))
                 s.remaining -= 1
                 self.lengths[i] += 1
                 self._next[i, 0] = int(toks[i])
@@ -678,24 +885,87 @@ class PagedInstance:
         return finished, _tick_info(
             prefill_s=prefill_s, decode_s=decode_s,
             decode_steps=1 if occ else 0, occupied=occ,
-            blocks_in_use=self.alloc.blocks_in_use())
+            blocks_in_use=self.alloc.blocks_in_use(),
+            prefill_rids=prefill_rids, decode_rids=decode_rids,
+            emitted=emitted, preempted=preempted)
 
 
 # =============================================================================
 # engine
 # =============================================================================
+class _Session:
+    """One serve session's bookkeeping: the policy queue, the open-loop
+    release schedule, per-request energy meters, swapped-out images, the
+    admission gate, and the aggregate counters ``stats`` reports."""
+
+    def __init__(self, core: SchedulerCore, instances) -> None:
+        self.core = core
+        self.t0 = time.perf_counter()
+        self.future: List[Tuple[float, int, int]] = []   # (t_abs, seq, rid)
+        self._fseq = 0
+        self.requests: Dict[int, InferenceRequest] = {}
+        self.meters: Dict[int, float] = {}
+        self.swapped: Dict[int, _SwapState] = {}
+        self.admit_gate: Dict[int, Tuple] = {}           # id(inst) → (rid, sig)
+        self.admit_t: Dict[int, float] = {}
+        self.responses: List[InferenceResponse] = []
+        self.admit_order: List[int] = []
+        self.queue_delays: List[float] = []
+        self.ttfts: List[float] = []
+        self.energy = 0.0
+        self.decode_steps = 0
+        self.occ_frac_sum = 0.0
+        self.inflight_sum = 0
+        self.admitted_sum = 0
+        self.tick_samples = 0
+        self.blocks_peak = 0
+        self.preempt_total = 0
+        self.progressed = False
+        # wall seconds already charged per instance (prefill + decode); the
+        # remainder of the serve wall is charged at idle power at drain, so
+        # an allocated-but-idle instance is never free (same convention as
+        # the DES's idle_chip_s accounting)
+        self.accounted_s = {id(i): 0.0 for i in instances}
+        # instance counters are lifetime (they survive reset/warm reuse);
+        # stats report THIS session's delta
+        self.chunks0 = sum(getattr(i, "prefill_chunks", 0) for i in instances)
+        self.hits0 = sum(getattr(i, "prefix_hit_tokens", 0)
+                         for i in instances)
+
+    def schedule(self, req: InferenceRequest) -> None:
+        if req.arrival_s is None:
+            self.core.submit(req.rid, self.t0, priority=req.priority,
+                             deadline_s=req.deadline_s, slo=req.slo)
+        else:
+            heapq.heappush(self.future,
+                           (self.t0 + float(req.arrival_s), self._fseq,
+                            req.rid))
+            self._fseq += 1
+
+    def rel(self, now: float) -> float:
+        """Session-relative seconds — the clock policies see.  Deadlines
+        stay as submitted (relative to session start), so the SAME policy
+        object behaves identically here and on the DES's simulated clock."""
+        return now - self.t0
+
+
 class RealEngine:
-    """Maps a ConfigGraph onto real instances and serves requests with
-    continuous batching, measuring wall latencies and estimating energy via
-    the slice power model scaled by row occupancy (the calibrated stand-in
-    for TPU telemetry)."""
+    """Maps a ConfigGraph onto real instances and serves
+    :class:`InferenceRequest`s with continuous batching through the
+    ``ServingBackend`` protocol, measuring wall latencies and attributing
+    occupancy-scaled energy (the calibrated stand-in for TPU telemetry) and
+    carbon (``ci_g_per_kwh``) per request."""
 
     def __init__(self, family: Sequence[EngineVariant], n_slots: int = 4,
                  max_len: int = 96, *, kv_layout: str = "slotted",
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  max_seqs: Optional[int] = None, chunk_blocks: int = 2,
-                 prefix_caching: bool = True):
+                 prefix_caching: bool = True,
+                 policy: Union[str, SchedulerPolicy, None] = "fifo",
+                 preemption: bool = False, ci_g_per_kwh: float = 0.0):
         assert kv_layout in ("slotted", "paged"), kv_layout
+        assert not (preemption and kv_layout == "slotted"), \
+            "preemption requires the paged KV layout (slots never grow)"
         self.family = {ev.variant.name: ev for ev in family}
         self.instances: List[Instance] = []
         self.n_slots = n_slots
@@ -709,11 +979,17 @@ class RealEngine:
         self.max_seqs = max_seqs if max_seqs is not None else 4 * n_slots
         self.chunk_blocks = chunk_blocks
         self.prefix_caching = prefix_caching
+        self.policy = make_policy(policy)
+        self.preemption = preemption
+        self.ci_g_per_kwh = ci_g_per_kwh
         self._pool: Dict[Tuple[str, int], List[Instance]] = {}
+        self._session: Optional[_Session] = None
+        self._last_stats: Dict[str, float] = {}
         self.last_reconfig_s = 0.0
         self.last_admit_order: List[int] = []
         self.last_outputs: Dict[int, np.ndarray] = {}
         self.last_latencies: List[float] = []
+        self.last_responses: List[InferenceResponse] = []
 
     def _new_instance(self, ev: EngineVariant, chips: int):
         if self.kv_layout == "paged":
@@ -722,7 +998,8 @@ class RealEngine:
                                  max_seqs=self.max_seqs,
                                  max_len=self.max_len,
                                  chunk_blocks=self.chunk_blocks,
-                                 prefix_caching=self.prefix_caching)
+                                 prefix_caching=self.prefix_caching,
+                                 preemption=self.preemption)
         return Instance(ev, chips, self.n_slots, self.max_len)
 
     def configure(self, graph) -> float:
@@ -732,6 +1009,7 @@ class RealEngine:
         reused — weights, KV arenas and compiled functions survive
         controller re-invocations; only genuinely new (variant, chips) pairs
         pay allocation + compile."""
+        assert self._session is None, "configure during an open serve session"
         t0 = time.perf_counter()
         for inst in self.instances:
             self._pool.setdefault((inst.ev.variant.name, inst.chips),
@@ -750,160 +1028,259 @@ class RealEngine:
         self.last_reconfig_s = time.perf_counter() - t0
         return self.last_reconfig_s
 
-    def serve(self, prompts: Sequence[np.ndarray], n_new: int = 8,
-              arrival_s: Optional[Sequence[float]] = None
-              ) -> Dict[str, float]:
-        """Continuous-batching serve: FIFO admission mid-flight (shared
-        ``SchedulerCore``), one tick (≤ one prefill chunk + one batched
-        decode step) per instance per loop, per-tick occupancy-scaled
-        energy.
-
-        ``arrival_s`` switches to OPEN-LOOP mode: request ``i`` becomes
-        visible ``arrival_s[i]`` wall seconds after the serve starts, so the
-        reported latencies include real queueing delay at the offered load
-        (closed-loop: all requests arrive at t0 and the run measures
-        makespan).  ``queue_delay_p95_s`` (admission wait) and
-        ``ttft_p95_s`` (first token) are reported either way."""
+    # --- ServingBackend protocol ---------------------------------------------
+    def submit(self, req: InferenceRequest) -> None:
+        """Enqueue a typed request.  The first submit after idle opens a
+        session (t0 = now); ``arrival_s`` schedules an open-loop release
+        relative to it."""
         assert self.instances, "configure() first"
-        core = SchedulerCore()
-        t0 = time.perf_counter()
-        payload: Dict[int, np.ndarray] = {}
-        for i, p in enumerate(prompts):
-            payload[i] = np.asarray(p, np.int32).reshape(-1)
-        future: Deque[Tuple[float, int]] = deque()
-        if arrival_s is None:
-            for i in payload:
-                core.submit(i, t0)
-        else:
-            assert len(arrival_s) == len(prompts)
-            for a, i in sorted(zip(arrival_s, range(len(prompts)))):
-                future.append((t0 + float(a), i))
-        self.last_admit_order = []
-        self.last_outputs = {}
-        queue_delays: List[float] = []
-        ttfts: List[float] = []
-        # instance counters are lifetime (they survive reset/warm reuse);
-        # serve metrics report THIS run's delta
-        chunks0 = sum(getattr(i, "prefill_chunks", 0) for i in self.instances)
-        hits0 = sum(getattr(i, "prefix_hit_tokens", 0)
-                    for i in self.instances)
-        energy = 0.0
-        decode_steps = 0
-        occ_frac_sum = 0.0
-        inflight_sum = 0
-        admitted_sum = 0
-        tick_samples = 0
-        blocks_peak = 0
-        # wall seconds already charged per instance (prefill + decode); the
-        # remainder of the serve wall is charged at idle power below, so an
-        # allocated-but-idle instance is never free (same convention as the
-        # DES's idle_chip_s accounting)
-        accounted_s = {id(i): 0.0 for i in self.instances}
+        if self._session is None:
+            self._session = _Session(SchedulerCore(self.policy),
+                                     self.instances)
+            self.last_admit_order = []
+            self.last_outputs = {}
+        s = self._session
+        assert req.rid not in s.requests, f"duplicate rid {req.rid}"
+        s.requests[req.rid] = req
+        s.meters[req.rid] = 0.0
+        s.schedule(req)
 
-        def finish(state, inst) -> None:
-            core.complete(state.rid, state.t_arrival, time.perf_counter(),
-                          inst.ev.variant.accuracy)
-            self.last_outputs[state.rid] = np.asarray(state.tokens, np.int64)
-            if state.t_first is not None:
-                ttfts.append(state.t_first - state.t_arrival)
-
-        while future or core.has_pending() \
-                or any(i.busy for i in self.instances):
-            now = time.perf_counter()
-            while future and future[0][0] <= now:
-                t_arr, i = future.popleft()
-                core.submit(i, t_arr)
-            # 1. admission: peek the FIFO head and place it on the first
-            #    instance with capacity (slots or blocks) — mid-flight, so
-            #    rows/blocks freed by the previous tick's completions refill
-            progressed = False
-            for inst in self.instances:
-                while True:
-                    nxt = core.peek_next()
-                    if nxt is None:
-                        break
-                    rid, t_arr = nxt
-                    if not inst.can_admit(len(payload[rid]), n_new):
-                        break
-                    core.pop_next()
-                    t1 = time.perf_counter()
-                    state, dt = inst.admit_next(rid, t_arr, payload[rid],
-                                                n_new)
-                    energy += inst.chips * PM.P_BUSY_W * dt   # prefill: busy
-                    accounted_s[id(inst)] += dt
-                    queue_delays.append(t1 - t_arr)
+    def step(self) -> List[InferenceResponse]:
+        """One scheduler pass: release due arrivals, run policy admission
+        over every instance (gated re-attempts), then one tick (≤ one
+        prefill chunk burst + one batched decode step) per busy instance.
+        Returns the requests that completed on this pass."""
+        s = self._session
+        if s is None:
+            return []
+        now = time.perf_counter()
+        now_rel = s.rel(now)
+        s.progressed = False
+        completed: List[InferenceResponse] = []
+        while s.future and s.future[0][0] <= now:
+            t_arr, _, rid = heapq.heappop(s.future)
+            req = s.requests[rid]
+            s.core.submit(rid, t_arr, priority=req.priority,
+                          deadline_s=req.deadline_s, slo=req.slo)
+        # 1. admission: peek the policy's next choice and place it on the
+        #    first instance with capacity (slots or blocks) — mid-flight, so
+        #    rows/blocks freed by the previous tick's completions refill.
+        #    A failed fit is GATED per instance: no re-attempt until the
+        #    queue head or the instance's free capacity actually changes.
+        for inst in self.instances:
+            while True:
+                nxt = s.core.peek_next(now_rel)
+                if nxt is None:
+                    break
+                rid, t_arr = nxt
+                sig = inst.admission_signature()
+                if s.admit_gate.get(id(inst)) == (rid, sig):
+                    break                # nothing changed since last failure
+                req = s.requests[rid]
+                swap = s.swapped.get(rid)
+                fits = (inst.can_resume(swap) if swap is not None
+                        else inst.can_admit(req.prompt_len,
+                                            req.max_new_tokens))
+                if not fits:
+                    s.admit_gate[id(inst)] = (rid, sig)
+                    break
+                s.admit_gate.pop(id(inst), None)
+                s.core.pop_next(now_rel)
+                t1 = time.perf_counter()
+                if swap is not None:
+                    state, dt = inst.resume(swap)
+                    del s.swapped[rid]
+                else:
+                    state, dt = inst.admit_next(rid, t_arr, req.prompt,
+                                                req.max_new_tokens,
+                                                priority=req.priority)
+                    s.admit_t[rid] = t1
+                    s.queue_delays.append(t1 - t_arr)
+                    s.admit_order.append(rid)
                     self.last_admit_order.append(rid)
-                    progressed = True
-                    if state.remaining <= 0 and state.tokens:  # n_new == 1
-                        finish(state, inst)
-            # 2. one tick per busy instance (≤ 1 prefill chunk + 1 decode)
-            for inst in self.instances:
-                if not inst.busy:
-                    continue
-                progressed = True
-                admitted_sum += inst.occupied   # holding cache memory now
-                tick_samples += 1
-                done, info = inst.tick()
-                energy += inst.chips * PM.P_BUSY_W * info["prefill_s"]
-                if info["decode_steps"]:
-                    occ = info["occupied"]
-                    energy += PM.instance_power_w(
-                        inst.chips, occ / inst.capacity) * info["decode_s"]
-                    decode_steps += 1
-                    occ_frac_sum += occ / inst.capacity
-                    inflight_sum += occ
-                accounted_s[id(inst)] += info["prefill_s"] + info["decode_s"]
-                blocks_peak = max(blocks_peak, int(info["blocks_in_use"]))
-                for state in done:
-                    finish(state, inst)
-            if not progressed:
-                if future and not core.has_pending():
-                    # open-loop idle gap: nothing in flight, next arrival in
-                    # the future — sleep up to it instead of busy-spinning
-                    time.sleep(min(max(future[0][0] - time.perf_counter(),
-                                       0.0), 0.01))
-                elif core.has_pending():
+                    if state.tokens and req.on_token is not None:
+                        req.on_token(rid, state.tokens[0])   # slotted first
+                e_pf = inst.chips * PM.P_BUSY_W * dt   # prefill: busy power
+                s.energy += e_pf
+                s.meters[rid] += e_pf
+                s.accounted_s[id(inst)] += dt
+                s.progressed = True
+                if state.remaining <= 0 and state.tokens:    # n_new == 1
+                    completed.append(self._finish(state, inst))
+        # 2. one tick per busy instance (≤ 1 prefill burst + 1 decode)
+        for inst in self.instances:
+            if not inst.busy:
+                continue
+            s.progressed = True
+            s.admitted_sum += inst.occupied   # holding cache memory now
+            s.tick_samples += 1
+            done, info = inst.tick()
+            s.energy += inst.chips * PM.P_BUSY_W * info["prefill_s"]
+            for rid, dtc in info["prefill_rids"]:
+                s.meters[rid] += inst.chips * PM.P_BUSY_W * dtc
+            if info["decode_steps"]:
+                occ = info["occupied"]
+                e_dec = PM.instance_power_w(
+                    inst.chips, occ / inst.capacity) * info["decode_s"]
+                s.energy += e_dec
+                share = e_dec / max(len(info["decode_rids"]), 1)
+                for rid in info["decode_rids"]:
+                    s.meters[rid] += share
+                s.decode_steps += 1
+                s.occ_frac_sum += occ / inst.capacity
+                s.inflight_sum += occ
+            s.accounted_s[id(inst)] += info["prefill_s"] + info["decode_s"]
+            s.blocks_peak = max(s.blocks_peak, int(info["blocks_in_use"]))
+            for rid, tok in info["emitted"]:
+                cb = s.requests[rid].on_token
+                if cb is not None:
+                    cb(rid, tok)
+            for swap in info["preempted"]:
+                req = s.requests[swap.rid]
+                s.swapped[swap.rid] = swap
+                s.preempt_total += 1
+                s.core.requeue_front(swap.rid, swap.t_arrival,
+                                     priority=req.priority,
+                                     deadline_s=req.deadline_s,
+                                     slo=req.slo)
+            for state in done:
+                completed.append(self._finish(state, inst))
+        return completed
+
+    def drain(self) -> List[InferenceResponse]:
+        """Run the session to completion; returns every response.  Closes
+        the session: the idle-power floor is spread across the responses,
+        carbon is attributed at ``ci_g_per_kwh``, and ``stats()`` reports
+        the aggregates."""
+        s = self._session
+        if s is None:
+            return []
+        while s.future or s.core.has_pending() \
+                or any(i.busy for i in self.instances):
+            self.step()
+            if s.progressed:
+                continue
+            now = time.perf_counter()
+            if s.future and not s.core.has_pending():
+                # open-loop idle gap: nothing in flight, next arrival in
+                # the future — sleep up to it instead of busy-spinning
+                time.sleep(min(max(s.future[0][0] - now, 0.0), 0.01))
+            elif s.core.has_pending():
+                if s.core.peek_next(s.rel(now)) is None:
+                    # policy hold (carbon-aware deferral): wait for the
+                    # clock/CI to move, the queue is intentionally parked
+                    time.sleep(0.001)
+                else:
                     raise RuntimeError(
                         "admission stalled: head request fits no instance")
+        self._finalize(s)
+        return s.responses
 
-        wall = time.perf_counter() - t0
+    def stats(self) -> Dict[str, float]:
+        """Aggregate metrics of the last drained session."""
+        return dict(self._last_stats)
+
+    # --- internals -----------------------------------------------------------
+    def _finish(self, state, inst) -> InferenceResponse:
+        s = self._session
+        req = s.requests[state.rid]
+        t_fin = time.perf_counter()
+        s.core.complete(state.rid, state.t_arrival, t_fin,
+                        inst.ev.variant.accuracy)
+        self.last_outputs[state.rid] = np.asarray(state.tokens, np.int64)
+        ttft = (state.t_first - state.t_arrival
+                if state.t_first is not None else 0.0)
+        if state.t_first is not None:
+            s.ttfts.append(ttft)
+        resp = InferenceResponse(
+            rid=state.rid, tokens=np.asarray(state.tokens, np.int64),
+            slo=req.slo, priority=req.priority, state=DONE,
+            t_arrival=state.t_arrival - s.t0, t_finish=t_fin - s.t0,
+            queue_delay_s=s.admit_t[state.rid] - state.t_arrival,
+            ttft_s=ttft, latency_s=t_fin - state.t_arrival,
+            energy_j=s.meters[state.rid], preemptions=state.preempts,
+            accuracy=inst.ev.variant.accuracy, deadline_s=req.deadline_s)
+        s.responses.append(resp)
+        return resp
+
+    def _finalize(self, s: _Session) -> None:
+        wall = time.perf_counter() - s.t0
         for inst in self.instances:       # idle floor for unaccounted wall
-            idle_s = max(wall - accounted_s[id(inst)], 0.0)
-            energy += inst.chips * PM.P_IDLE_W * idle_s
-        self.last_latencies = core.latencies
+            idle_s = max(wall - s.accounted_s[id(inst)], 0.0)
+            s.energy += inst.chips * PM.P_IDLE_W * idle_s
+        # attribute the idle floor + carbon: per-request joules sum to the
+        # engine total, gCO2 = joules × the serving window's intensity
+        attributed = sum(r.energy_j for r in s.responses)
+        idle_share = ((s.energy - attributed) / len(s.responses)
+                      if s.responses else 0.0)
+        for r in s.responses:
+            r.energy_j += idle_share
+            r.carbon_g = r.energy_j / 3.6e6 * self.ci_g_per_kwh
+        core = s.core
         served = core.served
-        total_tokens = served * n_new
-        return {
+        total_tokens = sum(r.n_tokens for r in s.responses)
+        self.last_latencies = core.latencies
+        self.last_responses = s.responses
+        self._last_stats = {
             "served": served,
             "p50_s": core.percentile(50.0),
             "p95_s": core.percentile(95.0),
             "p99_s": core.percentile(99.0),
             "mean_accuracy": core.acc_weighted / max(served, 1),
-            "energy_j": energy,
+            "energy_j": s.energy,
+            "carbon_g": s.energy / 3.6e6 * self.ci_g_per_kwh,
             "wall_s": wall,
             "tokens": total_tokens,
             "tokens_per_s": total_tokens / max(wall, 1e-9),
-            "j_per_token": energy / max(total_tokens, 1),
-            "decode_steps": decode_steps,
-            "mean_occupancy": (occ_frac_sum / decode_steps
-                               if decode_steps else 0.0),
-            "mean_inflight": (inflight_sum / decode_steps
-                              if decode_steps else 0.0),
+            "j_per_token": s.energy / max(total_tokens, 1),
+            "decode_steps": s.decode_steps,
+            "mean_occupancy": (s.occ_frac_sum / s.decode_steps
+                               if s.decode_steps else 0.0),
+            "mean_inflight": (s.inflight_sum / s.decode_steps
+                              if s.decode_steps else 0.0),
             # sequences holding cache memory per tick (decoding OR mid-
             # chunked-prefill) — the "sustained admitted concurrency" a
             # memory layout actually achieves on a given arena
-            "mean_admitted": (admitted_sum / tick_samples
-                              if tick_samples else 0.0),
-            "queue_delay_p95_s": (latency_percentile(queue_delays, 95.0)
-                                  if queue_delays else 0.0),
-            "ttft_p95_s": (latency_percentile(ttfts, 95.0)
-                           if ttfts else 0.0),
-            "blocks_peak": blocks_peak,
+            "mean_admitted": (s.admitted_sum / s.tick_samples
+                              if s.tick_samples else 0.0),
+            "queue_delay_p95_s": (latency_percentile(s.queue_delays, 95.0)
+                                  if s.queue_delays else 0.0),
+            "ttft_p95_s": (latency_percentile(s.ttfts, 95.0)
+                           if s.ttfts else 0.0),
+            "blocks_peak": s.blocks_peak,
+            "preemptions": s.preempt_total,
             "prefill_chunks": sum(getattr(i, "prefill_chunks", 0)
-                                  for i in self.instances) - chunks0,
+                                  for i in self.instances) - s.chunks0,
             "prefix_hit_tokens": sum(getattr(i, "prefix_hit_tokens", 0)
-                                     for i in self.instances) - hits0,
+                                     for i in self.instances) - s.hits0,
         }
+        self._session = None
+
+    # --- legacy surface ------------------------------------------------------
+    def serve(self, prompts: Sequence[np.ndarray], n_new: int = 8,
+              arrival_s: Optional[Sequence[float]] = None
+              ) -> Dict[str, float]:
+        """DEPRECATED one-PR shim over the request path: wraps bare token
+        lists into :class:`InferenceRequest`s (rid = position) and returns
+        the session stats — token-identical to submit()/drain()."""
+        warnings.warn(
+            "RealEngine.serve(prompts=...) is deprecated; build "
+            "serving.api.InferenceRequest objects and drive the engine "
+            "through submit()/drain() (ServingBackend protocol)",
+            DeprecationWarning, stacklevel=2)
+        return self._serve_prompts(prompts, n_new, arrival_s)
+
+    def _serve_prompts(self, prompts: Sequence[np.ndarray], n_new: int = 8,
+                       arrival_s: Optional[Sequence[float]] = None
+                       ) -> Dict[str, float]:
+        if arrival_s is not None:
+            assert len(arrival_s) == len(prompts)
+        for i, p in enumerate(prompts):
+            self.submit(InferenceRequest(
+                rid=i, prompt=p, max_new_tokens=n_new,
+                arrival_s=None if arrival_s is None else float(arrival_s[i])))
+        self.drain()
+        return self.stats()
 
     def serve_poisson(self, rate_rps: float, n_requests: int,
                       prompt_lens: Sequence[int] = (6,), n_new: int = 8,
@@ -911,9 +1288,9 @@ class RealEngine:
         """Open-loop serving under Poisson arrivals at ``rate_rps``.
 
         Prompts cycle through ``prompt_lens`` (random tokens); inter-arrival
-        gaps are exponential.  Returns the ``serve`` metrics plus the
-        offered rate — at sub-saturation loads ``queue_delay_p95_s`` stays
-        bounded, at saturation it grows with the run length."""
+        gaps are exponential.  Returns the session stats plus the offered
+        rate — at sub-saturation loads ``queue_delay_p95_s`` stays bounded,
+        at saturation it grows with the run length."""
         rng = np.random.default_rng(seed)
         vocab = next(iter(self.family.values())).cfg.vocab_size
         prompts = [rng.integers(0, vocab,
@@ -921,6 +1298,7 @@ class RealEngine:
                                 ).astype(np.int32)
                    for i in range(n_requests)]
         arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, n_requests))
-        m = self.serve(prompts, n_new=n_new, arrival_s=arrivals.tolist())
+        m = self._serve_prompts(prompts, n_new=n_new,
+                                arrival_s=arrivals.tolist())
         m["offered_rps"] = rate_rps
         return m

@@ -50,6 +50,11 @@ class BlockAllocator:
         # arena pages are warm in cache)
         self._free: List[int] = list(range(n_blocks - 1, 0, -1))
         self._ref: Dict[int, int] = {}
+        # bumped on EVERY refcount mutation (alloc/free/incref/COW): an O(1)
+        # change fingerprint for the engine's admission gate — a failed
+        # block-aware admission is only retried once this moves, instead of
+        # re-walking the prefix tree's evictable set every tick
+        self.version = 0
 
     # --- queries -------------------------------------------------------------
     @property
@@ -79,6 +84,7 @@ class BlockAllocator:
         out = [self._free.pop() for _ in range(n)]
         for bid in out:
             self._ref[bid] = 1
+        self.version += 1
         return out
 
     def incref(self, bids: Sequence[int]) -> None:
@@ -88,6 +94,7 @@ class BlockAllocator:
             if self._ref.get(bid, 0) <= 0:
                 raise ValueError(f"incref of unallocated block {bid}")
             self._ref[bid] += 1
+        self.version += 1
 
     def free(self, bids: Sequence[int]) -> List[int]:
         """Drop one reference per block; returns the blocks actually
@@ -106,6 +113,7 @@ class BlockAllocator:
                 reclaimed.append(bid)
             else:
                 self._ref[bid] = r - 1
+        self.version += 1
         return reclaimed
 
     def copy_on_write(self, bid: int) -> int:
@@ -121,6 +129,7 @@ class BlockAllocator:
             return bid
         new = self.alloc(1)[0]
         self._ref[bid] -= 1
+        self.version += 1
         return new
 
     # --- invariant check (tests / debugging) ---------------------------------

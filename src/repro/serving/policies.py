@@ -1,0 +1,133 @@
+"""Pluggable scheduling policies over the shared ``SchedulerCore``.
+
+Admission order used to be hard-wired FIFO in both the real engine and the
+DES.  A :class:`SchedulerPolicy` turns it into a strategy: given the live
+queue entries (in submission order) and the backend's current clock, pick
+the entry to admit next — or hold everything (return ``None``) when nothing
+*should* run right now, which is how the carbon-aware policy parks
+deferrable work under a dirty grid.
+
+Policies are pure selection: they never mutate the queue, never see device
+state, and work identically under the real engine's wall clock and the
+DES's simulated clock.  ``SchedulerCore`` keeps its plain deque fast path
+for FIFO (``is_fifo`` policies), so today's behavior stays bit-identical.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+__all__ = ["SchedulerPolicy", "FIFOPolicy", "PriorityPolicy", "EDFPolicy",
+           "CarbonAwarePolicy", "make_policy"]
+
+
+class SchedulerPolicy:
+    """Selection strategy over pending queue entries.
+
+    ``entries`` arrive in queue order (head first — for FIFO semantics the
+    first entry IS the choice); each entry exposes ``rid, t_arrival, seq,
+    priority, deadline_s, slo`` (see ``scheduler._Entry``).  Return the index
+    of the entry to admit next, or ``None`` to hold the queue."""
+
+    name = "base"
+    is_fifo = False                    # True → SchedulerCore's deque fast path
+
+    def select(self, entries: Sequence, now: Optional[float] = None
+               ) -> Optional[int]:
+        raise NotImplementedError
+
+
+class FIFOPolicy(SchedulerPolicy):
+    """Arrival order — today's behavior, bit-identical (the core keeps its
+    deque fast path and never calls ``select``)."""
+
+    name = "fifo"
+    is_fifo = True
+
+    def select(self, entries, now=None):
+        return 0 if entries else None
+
+
+class PriorityPolicy(SchedulerPolicy):
+    """Highest ``priority`` first; FIFO (submission order) within a level."""
+
+    name = "priority"
+
+    def select(self, entries, now=None):
+        if not entries:
+            return None
+        return min(range(len(entries)),
+                   key=lambda i: (-entries[i].priority, entries[i].seq))
+
+
+class EDFPolicy(SchedulerPolicy):
+    """Earliest deadline first; requests without a deadline queue FIFO
+    behind every deadlined request."""
+
+    name = "edf"
+
+    def select(self, entries, now=None):
+        if not entries:
+            return None
+        inf = float("inf")
+        return min(range(len(entries)),
+                   key=lambda i: (entries[i].deadline_s
+                                  if entries[i].deadline_s is not None
+                                  else inf, entries[i].seq))
+
+
+class CarbonAwarePolicy(SchedulerPolicy):
+    """Two-class carbon-aware admission: interactive requests always flow
+    (FIFO), deferrable requests are **held while the grid is dirty**
+    (``ci_fn(now) > ci_threshold``) and released EDF when it cleans up — or
+    force-released regardless of CI once their deadline runway
+    (``deadline_s − now``) shrinks below the estimated service time plus
+    margin, so a long dirty spell can never turn a hold into a miss."""
+
+    name = "carbon"
+
+    def __init__(self, ci_fn: Callable[[Optional[float]], float],
+                 ci_threshold: float, est_service_s: float = 0.0,
+                 deadline_margin_s: float = 0.0):
+        self.ci_fn = ci_fn
+        self.ci_threshold = ci_threshold
+        self.est_service_s = est_service_s
+        self.deadline_margin_s = deadline_margin_s
+
+    def _must_release(self, e, now: Optional[float]) -> bool:
+        if now is None or e.deadline_s is None:
+            return False
+        runway = e.deadline_s - now
+        return runway <= self.est_service_s + self.deadline_margin_s
+
+    def select(self, entries, now=None):
+        for i, e in enumerate(entries):        # interactive: plain FIFO
+            if e.slo == "interactive":
+                return i
+        if not entries:
+            return None
+        clean = self.ci_fn(now) <= self.ci_threshold
+        inf = float("inf")
+        candidates = [i for i, e in enumerate(entries)
+                      if clean or self._must_release(e, now)]
+        if not candidates:
+            return None                        # hold: grid dirty, runway wide
+        return min(candidates,
+                   key=lambda i: (entries[i].deadline_s
+                                  if entries[i].deadline_s is not None
+                                  else inf, entries[i].seq))
+
+
+def make_policy(name, **kwargs) -> SchedulerPolicy:
+    """Resolve a policy by name (``SchedulerPolicy`` instances pass
+    through).  ``carbon`` requires ``ci_fn`` and ``ci_threshold``."""
+    if isinstance(name, SchedulerPolicy):
+        return name
+    if name is None:
+        return FIFOPolicy()
+    table = {"fifo": FIFOPolicy, "priority": PriorityPolicy, "edf": EDFPolicy,
+             "carbon": CarbonAwarePolicy}
+    key = str(name).lower()
+    if key not in table:
+        raise ValueError(f"unknown scheduling policy {name!r} "
+                         f"(have {sorted(table)})")
+    return table[key](**kwargs)

@@ -14,9 +14,16 @@ tolerance):
 
 Used by tests (validates the fluid simulator on short horizons), by
 benchmarks for short-span exact replays, and by the real-execution engine
-(which substitutes measured service times).  The FIFO admission machinery
-(done-skipping queue, first-completion-wins, hedge/requeue counters) lives
-in ``serving.scheduler.SchedulerCore``, shared with the real engine.
+(which substitutes measured service times).  The admission machinery
+(done-skipping queue, first-completion-wins, hedge/requeue counters,
+pluggable :mod:`repro.serving.policies`) lives in
+``serving.scheduler.SchedulerCore``, shared with the real engine.
+
+Two surfaces: :func:`run_des` is the closed-form rate-driven simulation the
+fluid-model validation uses; :class:`DESBackend` exposes the same event
+machinery through the unified ``ServingBackend`` protocol
+(``serving.api``) — typed ``InferenceRequest``s in, per-request responses
+with attributed energy/carbon out, any scheduling policy in between.
 """
 from __future__ import annotations
 
@@ -24,11 +31,13 @@ import dataclasses
 import heapq
 import math
 import random
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core import config_graph as CG
 from repro.core import perf_model as PM
 from repro.core.catalog import Variant
+from repro.serving.api import DONE, InferenceRequest, InferenceResponse
+from repro.serving.policies import SchedulerPolicy, make_policy
 from repro.serving.scheduler import SchedulerCore, latency_percentile
 
 
@@ -197,3 +206,179 @@ def run_des(g: CG.ConfigGraph, variants: Sequence[Variant],
 
     return DESResult(core.latencies, core.acc_weighted, core.served, energy,
                      core.hedges, failures, core.requeues)
+
+
+# =============================================================================
+# ServingBackend protocol over the DES (unified request/response API)
+# =============================================================================
+class DESBackend:
+    """Per-request discrete-event simulation behind the unified
+    ``ServingBackend`` protocol (``serving.api``).
+
+    The same typed :class:`~repro.serving.api.InferenceRequest` workload the
+    real engine executes runs here analytically: arrivals release on the
+    SIMULATED clock (``arrival_s``), a pluggable
+    :class:`~repro.serving.policies.SchedulerPolicy` orders admissions
+    through the shared :class:`SchedulerCore`, service time is the
+    instance's nominal latency scaled by the request's decode budget
+    (lognormal jitter from :class:`DESConfig`), and responses carry the
+    same per-request attribution contract: busy joules charged to the
+    request that burned them, the idle floor spread across the session's
+    responses at drain, ``carbon_g = joules × ci_g_per_kwh``.
+
+    Tokens are never generated (``response.tokens is None``) — this backend
+    answers scheduling questions (policy orderings, deadline attainment,
+    carbon accounting) six orders of magnitude faster than real execution.
+    """
+
+    _ARRIVE, _FINISH = 0, 1
+
+    def __init__(self, g: CG.ConfigGraph, variants: Sequence[Variant],
+                 des: DESConfig = DESConfig(),
+                 policy: Union[str, SchedulerPolicy, None] = "fifo",
+                 ci_g_per_kwh: float = 0.0, tokens_ref: int = 8,
+                 hold_retry_s: float = 60.0):
+        self.g = g
+        self.des = des
+        self.policy = make_policy(policy)
+        self.ci_g_per_kwh = ci_g_per_kwh
+        self.tokens_ref = tokens_ref       # decode budget the nominal maps to
+        self.hold_retry_s = hold_retry_s   # clock hop when the policy parks
+                                           # the whole queue (carbon hold)
+        self._rng = random.Random(des.seed)
+        by_name = {v.name: v for v in variants}
+        self._instances: List[_Instance] = []
+        for (vname, chips), w in g.edges:
+            v = by_name[vname]
+            sp = PM.cached_point(v, chips)
+            for _ in range(w):
+                self._instances.append(
+                    _Instance(len(self._instances), v, chips, sp.latency_s))
+        self.core = SchedulerCore(self.policy)
+        self.now = 0.0
+        self._heap: List[Tuple[float, int, int, tuple]] = []
+        self._seq = 0
+        self._reqs: Dict[int, InferenceRequest] = {}
+        self._meters: Dict[int, float] = {}
+        self._starts: Dict[int, float] = {}
+        self._responses: List[InferenceResponse] = []   # step's delta buffer
+        self._done: List[InferenceResponse] = []        # whole session
+        self._busy_j = 0.0
+        self._stats: Dict[str, float] = {}
+
+    # --- protocol ------------------------------------------------------------
+    def submit(self, req: InferenceRequest) -> None:
+        assert req.rid not in self._reqs, f"duplicate rid {req.rid}"
+        self._reqs[req.rid] = req
+        self._meters[req.rid] = 0.0
+        self._push(req.arrival_s or 0.0, self._ARRIVE, (req.rid,))
+
+    def step(self) -> List[InferenceResponse]:
+        """Process one event off the heap (advancing the simulated clock).
+        When the heap is empty but the policy still parks live work (carbon
+        hold), the clock hops ``hold_retry_s`` forward and re-dispatches —
+        time passing is what changes the policy's mind."""
+        if not self._heap:
+            if self.core.has_pending():
+                self.now += self.hold_retry_s
+                self._dispatch()
+            return self._drain_completed()
+        t, _, kind, payload = heapq.heappop(self._heap)
+        self.now = max(self.now, t)
+        if kind == self._ARRIVE:
+            (rid,) = payload
+            req = self._reqs[rid]
+            self.core.submit(rid, self.now, priority=req.priority,
+                             deadline_s=req.deadline_s, slo=req.slo)
+            self._dispatch()
+        elif kind == self._FINISH:
+            idx, rid, t_arr = payload
+            inst = self._instances[idx]
+            if inst.current and inst.current[0] == rid:
+                inst.busy = False
+                inst.current = None
+                self._complete(rid, t_arr, inst)
+                self._dispatch()
+        return self._drain_completed()
+
+    def drain(self) -> List[InferenceResponse]:
+        """Run every submitted request to completion and return ALL of the
+        session's responses (including ones a prior ``step`` already
+        handed out — the idle floor and carbon attribution must cover the
+        whole session, not just the drain-collected tail)."""
+        while self._heap or self.core.has_pending() \
+                or any(i.busy for i in self._instances):
+            self.step()
+        self._finalize(self._done)
+        return list(self._done)
+
+    def stats(self) -> Dict[str, float]:
+        return dict(self._stats)
+
+    # --- internals -----------------------------------------------------------
+    def _push(self, t: float, kind: int, payload: tuple) -> None:
+        heapq.heappush(self._heap, (t, self._seq, kind, payload))
+        self._seq += 1
+
+    def _service_s(self, inst: _Instance, req: InferenceRequest) -> float:
+        base = inst.nominal * (req.max_new_tokens / self.tokens_ref)
+        if self.des.jitter_sigma > 0:
+            base *= math.exp(self._rng.gauss(0.0, self.des.jitter_sigma))
+        return base
+
+    def _dispatch(self) -> None:
+        for inst in self._instances:
+            if inst.busy or not inst.alive:
+                continue
+            nxt = self.core.pop_next(self.now)
+            if nxt is None:
+                break
+            rid, t_arr = nxt
+            req = self._reqs[rid]
+            svc = self._service_s(inst, req)
+            inst.busy = True
+            inst.current = (rid, t_arr)
+            self._starts[rid] = self.now
+            self._meters[rid] += inst.chips * PM.P_BUSY_W * svc
+            self._busy_j += inst.chips * PM.P_BUSY_W * svc
+            self._push(self.now + svc, self._FINISH, (inst.idx, rid, t_arr))
+
+    def _complete(self, rid: int, t_arr: float, inst: _Instance) -> None:
+        req = self._reqs[rid]
+        self.core.complete(rid, t_arr, self.now, inst.variant.accuracy)
+        start = self._starts.get(rid, t_arr)
+        resp = InferenceResponse(
+            rid=rid, tokens=None, slo=req.slo, priority=req.priority,
+            state=DONE, t_arrival=t_arr, t_finish=self.now,
+            queue_delay_s=start - t_arr, ttft_s=self.now - t_arr,
+            latency_s=self.now - t_arr, energy_j=self._meters[rid],
+            accuracy=inst.variant.accuracy, deadline_s=req.deadline_s)
+        self._responses.append(resp)
+        self._done.append(resp)
+
+    def _drain_completed(self) -> List[InferenceResponse]:
+        out, self._responses = self._responses, []
+        return out
+
+    def _finalize(self, responses: List[InferenceResponse]) -> None:
+        idle_chip_s = max(self.g.total_chips * self.now
+                          - self._busy_j / PM.P_BUSY_W, 0.0)
+        idle_j = idle_chip_s * PM.P_IDLE_W
+        total_j = self._busy_j + idle_j
+        share = idle_j / len(responses) if responses else 0.0
+        for r in responses:
+            r.energy_j += share
+            r.carbon_g = r.energy_j / 3.6e6 * self.ci_g_per_kwh
+        core = self.core
+        self._stats = {
+            "served": core.served,
+            "p50_s": core.percentile(50.0),
+            "p95_s": core.percentile(95.0),
+            "p99_s": core.percentile(99.0),
+            "mean_accuracy": core.acc_weighted / max(core.served, 1),
+            "energy_j": total_j,
+            "carbon_g": total_j / 3.6e6 * self.ci_g_per_kwh,
+            "wall_s": self.now,
+            "deadline_misses": sum(not r.deadline_met for r in responses),
+            "preemptions": 0,
+        }

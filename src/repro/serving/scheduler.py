@@ -1,21 +1,27 @@
 """Shared scheduler core for the serving layer (paper §4.3 load balancer).
 
 Both serving paths need the same admission machinery and used to duplicate
-it: the analytic DES (``serving.queue.run_des``) and the real-execution
+it: the analytic DES (``serving.queue``) and the real-execution
 continuous-batching engine (``serving.engine.RealEngine``).  This module is
 the single implementation both build on:
 
-  * a FIFO admission queue with lazy completion skipping (a hedged or
-    re-queued request may already be done by the time it reaches the head);
+  * an admission queue with lazy completion skipping (a hedged or re-queued
+    request may already be done by the time it reaches the head);
+  * **pluggable ordering** (``serving.policies.SchedulerPolicy``): entries
+    carry priority / deadline / SLO-class metadata and the policy picks the
+    next admission — or holds the queue (carbon-aware deferral).  Without a
+    policy (or with FIFO) the core runs its original deque fast path,
+    bit-identical to the pre-policy behavior;
   * first-completion-wins bookkeeping (hedges dispatch duplicates; only the
     first finish records a latency and an accuracy credit);
-  * hedge / fail-repair requeue counters;
+  * hedge / fail-repair / preemption requeue counters;
   * nearest-rank latency percentiles (the correct rank rounding — p50 of
     [1, 2, 3, 4] is 2, and p95 never indexes past the end of the sample).
 
 The DES drives it from a simulated-time event heap; the real engine drives
 it from wall-clock decode steps.  Neither knows about the other's notion of
-time — the core only ever receives timestamps.
+time — the core only ever receives timestamps, and passes ``now`` through
+to the policy for deadline/CI decisions.
 """
 from __future__ import annotations
 
@@ -23,6 +29,8 @@ import dataclasses
 import math
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.serving.policies import SchedulerPolicy
 
 
 def latency_percentile(lats: Sequence[float], q: float) -> float:
@@ -39,58 +47,127 @@ def latency_percentile(lats: Sequence[float], q: float) -> float:
 
 
 @dataclasses.dataclass
+class _Entry:
+    """One queued admission: request id + the metadata policies order by.
+    ``seq`` is a monotonic submission counter — the stable FIFO tie-break
+    within a priority level / deadline."""
+    rid: int
+    t_arrival: float
+    seq: int
+    priority: int = 0
+    deadline_s: Optional[float] = None
+    slo: str = "interactive"
+
+
 class SchedulerCore:
-    """FIFO admission queue + completion/hedge/requeue bookkeeping.
+    """Admission queue + completion/hedge/requeue bookkeeping.
 
-    Queue entries are ``(request id, arrival time)``; the payload (prompt,
-    analytic work size, …) stays with the caller, keyed by request id."""
+    Queue entries are ``(request id, arrival time)`` plus policy metadata;
+    the payload (prompt, analytic work size, …) stays with the caller,
+    keyed by request id.  ``policy=None`` (or any ``is_fifo`` policy) keeps
+    the original FIFO deque semantics exactly."""
 
-    _queue: Deque[Tuple[int, float]] = dataclasses.field(default_factory=deque)
-    done: Dict[int, bool] = dataclasses.field(default_factory=dict)
-    latencies: List[float] = dataclasses.field(default_factory=list)
-    acc_weighted: float = 0.0
-    served: int = 0
-    hedges: int = 0
-    requeues: int = 0
+    def __init__(self, policy: Optional[SchedulerPolicy] = None):
+        self.policy = policy
+        self._fifo = policy is None or getattr(policy, "is_fifo", False)
+        self._queue: Deque[_Entry] = deque()
+        self._seq = 0
+        self.done: Dict[int, bool] = {}
+        self.latencies: List[float] = []
+        self.acc_weighted: float = 0.0
+        self.served: int = 0
+        self.hedges: int = 0
+        self.requeues: int = 0
 
     # --- admission -----------------------------------------------------------
-    def submit(self, rid: int, t_arrival: float) -> None:
-        """Enqueue a new request at the tail (FIFO order = arrival order)."""
-        self._queue.append((rid, t_arrival))
+    def submit(self, rid: int, t_arrival: float, *, priority: int = 0,
+               deadline_s: Optional[float] = None,
+               slo: str = "interactive") -> None:
+        """Enqueue a new request at the tail (submission order is the FIFO
+        order and every policy's tie-break)."""
+        self._queue.append(_Entry(rid, t_arrival, self._seq, priority,
+                                  deadline_s, slo))
+        self._seq += 1
 
-    def pop_next(self) -> Optional[Tuple[int, float]]:
-        """Head-of-line request that is still live, or None.  Entries whose
-        request already completed (hedge duplicates, stale requeues) are
-        dropped on the way — the caller never sees them."""
-        while self._queue:
-            rid, t_arr = self._queue.popleft()
-            if not self.done.get(rid):
-                return rid, t_arr
-        return None
+    def _prune(self) -> None:
+        """Drop completed entries.  FIFO only ever needs the head pruned
+        (original lazy behavior); policies scan the whole queue, so stale
+        interior entries must go before selection."""
+        if self._fifo:
+            while self._queue and self.done.get(self._queue[0].rid):
+                self._queue.popleft()
+        else:
+            if any(self.done.get(e.rid) for e in self._queue):
+                self._queue = deque(e for e in self._queue
+                                    if not self.done.get(e.rid))
 
-    def peek_next(self) -> Optional[Tuple[int, float]]:
-        """Head-of-line live request WITHOUT popping it — admission control
-        that depends on the request (does this prompt fit the instance's
-        free blocks?) peeks first and only pops once a home is found, so a
-        temporarily unadmittable request keeps its FIFO position."""
-        return self._queue[0] if self.has_pending() else None
+    def _select(self, now: Optional[float]) -> Optional[int]:
+        """Index of the next admission under the policy, or None (empty
+        queue, or the policy is holding everything)."""
+        self._prune()
+        if not self._queue:
+            return None
+        if self._fifo:
+            return 0
+        return self.policy.select(list(self._queue), now)
+
+    def pop_next(self, now: Optional[float] = None
+                 ) -> Optional[Tuple[int, float]]:
+        """Next admission under the policy, or None.  Entries whose request
+        already completed (hedge duplicates, stale requeues) are dropped on
+        the way — the caller never sees them."""
+        idx = self._select(now)
+        if idx is None:
+            return None
+        if idx == 0:
+            e = self._queue.popleft()
+        else:
+            e = self._queue[idx]
+            del self._queue[idx]
+        return e.rid, e.t_arrival
+
+    def peek_next(self, now: Optional[float] = None
+                  ) -> Optional[Tuple[int, float]]:
+        """The next admission WITHOUT popping it — admission control that
+        depends on the request (does this prompt fit the instance's free
+        blocks?) peeks first and only pops once a home is found, so a
+        temporarily unadmittable request keeps its queue position."""
+        idx = self._select(now)
+        if idx is None:
+            return None
+        e = self._queue[idx]
+        return e.rid, e.t_arrival
 
     def has_pending(self) -> bool:
-        while self._queue and self.done.get(self._queue[0][0]):
-            self._queue.popleft()
+        """Live entries remain (the policy may still be HOLDING them all —
+        ``peek_next`` returning None distinguishes a hold from empty)."""
+        self._prune()
         return bool(self._queue)
 
     # --- priority re-entry ---------------------------------------------------
-    def hedge_front(self, rid: int, t_arrival: float) -> None:
+    def hedge_front(self, rid: int, t_arrival: float, *, priority: int = 0,
+                    deadline_s: Optional[float] = None,
+                    slo: str = "interactive") -> None:
         """Duplicate a slow in-flight request at the head of the queue; the
-        first completion wins (the duplicate's finish becomes a no-op)."""
-        self._queue.appendleft((rid, t_arrival))
+        first completion wins (the duplicate's finish becomes a no-op).
+        Metadata must match the original submission or a policy would
+        mis-order the duplicate (e.g. EDF sorting a deadline-less twin
+        behind every deadlined entry)."""
+        self._queue.appendleft(_Entry(rid, t_arrival, -self._seq, priority,
+                                      deadline_s, slo))
+        self._seq += 1
         self.hedges += 1
 
-    def requeue_front(self, rid: int, t_arrival: float) -> None:
-        """Re-queue a request lost to an instance failure at the head (no
-        request loss, original arrival time preserved for its latency)."""
-        self._queue.appendleft((rid, t_arrival))
+    def requeue_front(self, rid: int, t_arrival: float, *, priority: int = 0,
+                      deadline_s: Optional[float] = None,
+                      slo: str = "interactive") -> None:
+        """Re-queue a request lost to an instance failure — or swapped out
+        by a preemption — at the head (no request loss, original arrival
+        time preserved for its latency).  The negative ``seq`` keeps it
+        ahead of every same-key entry under any policy's tie-break."""
+        self._queue.appendleft(_Entry(rid, t_arrival, -self._seq, priority,
+                                      deadline_s, slo))
+        self._seq += 1
         self.requeues += 1
 
     # --- completion ----------------------------------------------------------
