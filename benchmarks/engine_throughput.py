@@ -48,6 +48,7 @@ def main() -> int:
     from repro.configs import get_smoke_config
     from repro.core import config_graph as CG
     from repro.serving import engine as ENG
+    from repro.serving.api import serve_prompts as serve
 
     base = get_smoke_config(args.arch).with_(n_layers=args.layers,
                                              dtype=jnp.float32)
@@ -68,10 +69,10 @@ def main() -> int:
         for mode, n_slots in (("batch1", 1), ("continuous", args.slots)):
             eng = ENG.RealEngine(family, n_slots=n_slots, max_len=max_len)
             eng.configure(g)
-            eng.serve(prompts, n_new=args.new_tokens)         # jit warmup
+            serve(eng, prompts, args.new_tokens)              # jit warmup
             m = None
             for _ in range(args.reps):
-                mi = eng.serve(prompts, n_new=args.new_tokens)
+                mi = serve(eng, prompts, args.new_tokens)
                 if m is None or mi["tokens_per_s"] > m["tokens_per_s"]:
                     m = mi
             per_mode[mode] = m

@@ -31,6 +31,7 @@ def main():
     from repro.configs import get_smoke_config
     from repro.core import config_graph as CG
     from repro.serving import engine as ENG
+    from repro.serving.api import serve_prompts as serve
 
     base = get_smoke_config(args.arch).with_(n_layers=4, dtype=jnp.float32)
     family = ENG.build_engine_family(base, fracs=(1.0,))
@@ -59,7 +60,7 @@ def main():
           f"blocks (= 4 slotted slots of {max_len})")
 
     # closed loop: everything arrives at once — makespan + packing
-    m = eng.serve(prompts, n_new=args.new_tokens)
+    m = serve(eng, prompts, args.new_tokens)
     print(f"\nclosed loop : {m['tokens_per_s']:7.1f} tok/s  "
           f"J/token={m['j_per_token']:.3f}  "
           f"admitted={m['mean_admitted']:.1f} seqs  "
@@ -79,7 +80,7 @@ def main():
           f"TTFT p95={mo['ttft_p95_s']*1e3:.1f}ms")
 
     # the radix cache persists across serves: the same preamble now hits
-    m2 = eng.serve(prompts, n_new=args.new_tokens)
+    m2 = serve(eng, prompts, args.new_tokens)
     print(f"second pass : {m2['tokens_per_s']:7.1f} tok/s  "
           f"prefix hits={m2['prefix_hit_tokens']} tokens "
           f"({m2['prefill_chunks']} chunked prefills)")

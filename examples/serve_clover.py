@@ -32,6 +32,7 @@ def main():
     from repro.core import config_graph as CG
     from repro.core import objective as OBJ
     from repro.serving import engine as ENG
+    from repro.serving.api import serve_prompts as serve
 
     print(f"=== Clover real-execution serving demo ({args.arch} ladder, "
           f"continuous batching × {args.slots} slots) ===")
@@ -51,8 +52,8 @@ def main():
     # --- BASE: highest quality on the whole block --------------------------------
     g_base = CG.ConfigGraph.from_dict(base_cfg.name, {("x1", 16): 1})
     t_cold = eng.configure(g_base)
-    eng.serve(prompts[:args.slots], n_new=args.new_tokens)   # warm the path
-    m_base = eng.serve(prompts, n_new=args.new_tokens)
+    serve(eng, prompts[:args.slots], args.new_tokens)        # warm the path
+    m_base = serve(eng, prompts, args.new_tokens)
     print(f"\nBASE   : p95={m_base['p95_s']*1e3:7.1f}ms "
           f"energy={m_base['energy_j']:8.1f}J acc={m_base['mean_accuracy']:.3f} "
           f"{m_base['tokens_per_s']:7.1f} tok/s "
@@ -68,7 +69,7 @@ def main():
 
     def evaluator(graph):
         eng.configure(graph)          # warm after the first visit to a config
-        m = eng.serve(probe, n_new=args.new_tokens)
+        m = serve(eng, probe, args.new_tokens)
         return OBJ.EvalResult(m["mean_accuracy"], 1.0 / max(m["p50_s"], 1e-9),
                               0.5, m["p95_s"], 0.0, m["energy_j"] / m["served"])
 
@@ -77,7 +78,7 @@ def main():
                         sa_cfg=SA.SAConfig(stale_limit=6, eval_window_s=0.0),
                         rng=random.Random(1))
         t_re = eng.configure(out.best)
-        m = eng.serve(prompts, n_new=args.new_tokens)
+        m = serve(eng, prompts, args.new_tokens)
         save = (1 - m["energy_j"] / m_base["energy_j"]) * 100
         print(f"CLOVER @ci={ci:5.0f}: cfg={dict(out.best.edges)} "
               f"p95={m['p95_s']*1e3:7.1f}ms energy={m['energy_j']:8.1f}J "

@@ -5,5 +5,23 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# Lock in the serve(prompts=...) shim removal: no deprecated surface may
+# grow back inside src/repro.  (A source grep, because warnings raised
+# with stacklevel=2 are attributed to the CALLER's module and slip past
+# any module-qualified -W filter.)
+if grep -rn "DeprecationWarning" src/repro --include="*.py"; then
+    echo "ERROR: DeprecationWarning surface found in src/repro" >&2
+    exit 1
+fi
+
 python -m compileall -q src benchmarks examples tests scripts
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+# belt to the grep's braces: DeprecationWarnings attributed to repro
+# modules (stacklevel=1, or third-party deprecations triggered from repro
+# frames) are errors too
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+    -W 'error::DeprecationWarning:repro' "$@"
+# the HLO analyzer suite runs UN-deselected (no marker filter): the seed
+# scan-matmul FLOPs regression must gate pushes even if someone marks it
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest \
+    tests/test_hlo_analysis.py -q -m "" \
+    -W 'error::DeprecationWarning:repro'

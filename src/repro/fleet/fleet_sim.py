@@ -121,11 +121,28 @@ class FleetConfig:
     engine_kv_layout: str = "slotted"  # "paged" = kvpool block arena + radix
                                        # prefix cache (PR 3) per region
     engine_policy: str = "fifo"        # SchedulerPolicy name for the probe
-                                       # engines (serving.policies)
+                                       # engines (serving.policies).
+                                       # "carbon" / "carbon_forecast" are
+                                       # built over THIS region's forecaster
+                                       # (forecast.ForecastCIFn), not a raw
+                                       # trace lookup — the Clover loop acts
+                                       # on predicted CI end to end
+    engine_policy_horizon_s: float = 3600.0   # forecast-valley horizon fed
+                                              # to CarbonForecastPolicy
+    engine_ci_threshold_g: float = 300.0      # clean-grid release threshold
+                                              # (gCO2/kWh) for both carbon
+                                              # policies
     engine_preemption: bool = False    # paged decode-time swap-out (PR 4)
     probe_requests: int = 4            # real requests probed per window
     probe_prompt_len: int = 6
     probe_new_tokens: int = 4
+    probe_deferrable_frac: float = 0.0 # fraction of each window's probe batch
+                                       # submitted DEFERRABLE with a short
+                                       # session-clock deadline, so a carbon
+                                       # policy's hold/release path runs on
+                                       # real execution every window
+    probe_deadline_s: float = 2.0      # that deadline (seconds on the probe
+                                       # session's wall clock)
 
     def resolved_max_blocks(self) -> int:
         return self.max_blocks if self.max_blocks is not None else 3 * self.n_blocks
@@ -219,16 +236,47 @@ class _Region:
             # lazy imports: the fluid path must not depend on jax
             from repro.serving import backends as BK
             from repro.serving import engine as ENG
+            from repro.serving import policies as POL
+            # carbon policies read THIS region's forecaster through the
+            # ci_fn contract — the probe engine schedules on predicted CI,
+            # re-anchored to each window's trace time by probe_window.  The
+            # probe session's wall clock crawls relative to the trace, so
+            # ForecastCIFn maps the probe DEADLINE runway onto the
+            # configured forecast horizon: a deferrable probe's few seconds
+            # of session runway span engine_policy_horizon_s of grid time,
+            # and the valley logic genuinely engages every window.
+            policy = cfg.engine_policy
+            probe_ci_fn = None
+            if cfg.engine_policy in ("carbon", "carbon_forecast"):
+                scale = (cfg.engine_policy_horizon_s
+                         / max(cfg.probe_deadline_s, 1e-9))
+                probe_ci_fn = FC.ForecastCIFn(self.forecaster,
+                                              time_scale=scale)
+                # force-release while half the session deadline budget
+                # remains — a hold must never turn a probe into a miss
+                margin = 0.5 * cfg.probe_deadline_s
+                if cfg.engine_policy == "carbon":
+                    policy = POL.CarbonAwarePolicy(
+                        probe_ci_fn, ci_threshold=cfg.engine_ci_threshold_g,
+                        deadline_margin_s=margin)
+                else:
+                    policy = POL.CarbonForecastPolicy(
+                        probe_ci_fn, horizon_s=cfg.probe_deadline_s,
+                        step_s=cfg.probe_deadline_s / 12.0,
+                        ci_threshold=cfg.engine_ci_threshold_g,
+                        deadline_margin_s=margin)
             eng = ENG.RealEngine(engine_family, n_slots=cfg.engine_slots,
                                  max_len=cfg.engine_max_len,
                                  kv_layout=cfg.engine_kv_layout,
-                                 policy=cfg.engine_policy,
+                                 policy=policy,
                                  preemption=cfg.engine_preemption)
             self.server = BK.RealWindowServer(
                 self.ctx.variants, self.acct, self.ctx.obj_cfg.l_tail_s,
                 engine=eng, probe_requests=cfg.probe_requests,
                 prompt_len=cfg.probe_prompt_len, n_new=cfg.probe_new_tokens,
-                seed=cfg.seed)
+                seed=cfg.seed, ci_fn=probe_ci_fn,
+                deferrable_frac=cfg.probe_deferrable_frac,
+                probe_deadline_s=cfg.probe_deadline_s)
             # reconfigurations flow through Controller.maybe_reoptimize /
             # scale_blocks straight into the engine's warm configure
             self.controller.on_config_change = self.server.apply_config

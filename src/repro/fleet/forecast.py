@@ -164,6 +164,39 @@ def make_forecaster(name: str, trace: CarbonTrace, **kw) -> Forecaster:
     return FORECASTERS[name](trace, **kw)
 
 
+class ForecastCIFn:
+    """Adapt a :class:`Forecaster` to the scheduling policies' ``ci_fn``
+    contract (``serving.policies``): ``ci_fn(now, horizon_s=0)`` → forecast
+    gCO2/kWh at ``now + horizon_s``, where ``now`` is the *backend's*
+    session-relative clock.
+
+    ``time_scale`` maps backend seconds onto trace seconds (a real engine's
+    wall clock crawls relative to an hour-scale trace; a DES replaying a
+    compressed workload may map 1 s → 1 h).  ``set_epoch`` re-anchors the
+    session origin onto the trace's absolute clock — the fleet's real
+    backend calls it with each probe window's ``t``, so the same policy
+    object sees the right stretch of grid across windows.
+
+    Horizon 0 is the nowcast: the forecaster's own fitted value at ``t``
+    (NOT a raw trace lookup — an honest policy only ever sees what its
+    forecaster believes)."""
+
+    def __init__(self, forecaster: Forecaster, time_scale: float = 1.0,
+                 t0: float = 0.0):
+        self.forecaster = forecaster
+        self.time_scale = time_scale
+        self.t0 = t0
+
+    def set_epoch(self, t0: float) -> None:
+        self.t0 = float(t0)
+
+    def __call__(self, now: Optional[float] = None,
+                 horizon_s: float = 0.0) -> float:
+        t = self.t0 + float(now or 0.0) * self.time_scale
+        return float(self.forecaster.predict(t, float(horizon_s)
+                                             * self.time_scale))
+
+
 # =============================================================================
 # backtesting
 # =============================================================================

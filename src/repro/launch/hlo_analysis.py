@@ -82,6 +82,11 @@ _CALL_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)=%?
 _DOT_RE = re.compile(
     r"=\s+([a-z0-9]+\[[0-9,]*\])\S*\s+dot\(([^)]*)\)(.*)$")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+# one dot operand: an optional inline shape (``f32[64,64]{1,0}``) followed by
+# the op name.  Scheduled HLO prints operands either way depending on the
+# computation (while bodies inline the shape, fusions name bare parameters).
+_OPERAND_RE = re.compile(
+    r"\s*(?:([a-z0-9]+\[[0-9,]*\])\S*\s+)?%?([\w.\-]+)")
 _DEF_RE = re.compile(r"^%?([\w.\-]+)\s+=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]))")
 
 
@@ -113,9 +118,15 @@ def _dot_flops(line: str, symbols: Dict[str, str]) -> float:
         return 0.0
     result_shape, operands, attrs = m.groups()
     _, rdims = _shape_info(result_shape)
-    lhs = operands.split(",")[0].strip().lstrip("%")
-    lhs_shape = symbols.get(lhs, lhs)          # operand may carry inline shape
-    _, ldims = _shape_info(lhs_shape)
+    # the lhs operand: splitting on "," would cut an inline shape's dims
+    # list in half (``f32[64,64]{1,0} %x`` → ``f32[64``), silently dropping
+    # the contraction dimension for every dot inside a while/scan body
+    om = _OPERAND_RE.match(operands)
+    if om and om.group(1):
+        _, ldims = _shape_info(om.group(1))    # inline operand shape
+    else:
+        lhs = om.group(2) if om else operands.strip().lstrip("%")
+        _, ldims = _shape_info(symbols.get(lhs, ""))
     cm = _CONTRACT_RE.search(attrs)
     k = 1
     if cm and cm.group(1):

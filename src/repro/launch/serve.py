@@ -53,6 +53,7 @@ def run_real(args) -> int:
     from repro.core import config_graph as CG
     from repro.core import objective as OBJ
     from repro.serving import engine as ENG
+    from repro.serving.api import serve_prompts as serve
 
     base_cfg = get_smoke_config(args.arch).with_(n_layers=8, dtype=jnp.float32)
     fam = ENG.build_engine_family(base_cfg, fracs=(1.0, 0.5, 0.25))
@@ -66,7 +67,7 @@ def run_real(args) -> int:
     print(f"[serve] initial config: {dict(g.edges)}")
     eng.configure(g)
     prompts = [np.array([[1, 5, 9, 2]], dtype=np.int32) for _ in range(args.requests)]
-    m0 = eng.serve(prompts, n_new=4)
+    m0 = serve(eng, prompts, 4)
     print(f"[serve] BASE-quality: p95={m0['p95_s']*1e3:.0f}ms "
           f"energy={m0['energy_j']:.1f}J acc={m0['mean_accuracy']:.2f}")
 
@@ -77,7 +78,7 @@ def run_real(args) -> int:
 
     def evaluator(graph):
         dt = eng.configure(graph)
-        m = eng.serve(prompts[: max(4, args.requests // 4)], n_new=4)
+        m = serve(eng, prompts[: max(4, args.requests // 4)], 4)
         cap = m["served"] / max(sum(x for x in (m["p95_s"],)), 1e-9)
         return OBJ.EvalResult(m["mean_accuracy"], 1.0 / m["p50_s"], 0.5,
                               m["p95_s"], 0.0,
@@ -89,7 +90,7 @@ def run_real(args) -> int:
     print(f"[serve] Clover chose {dict(out.best.edges)} after {out.n_evals} "
           f"real evaluations; f={out.best_f:.2f}")
     eng.configure(out.best)
-    m1 = eng.serve(prompts, n_new=4)
+    m1 = serve(eng, prompts, 4)
     print(f"[serve] CLOVER: p95={m1['p95_s']*1e3:.0f}ms "
           f"energy={m1['energy_j']:.1f}J acc={m1['mean_accuracy']:.2f} "
           f"(energy saving {100*(1-m1['energy_j']/m0['energy_j']):.0f}%)")

@@ -37,7 +37,7 @@ import numpy as np
 
 __all__ = ["INTERACTIVE", "DEFERRABLE", "QUEUED", "RUNNING", "PREEMPTED",
            "DONE", "InferenceRequest", "InferenceResponse", "ServingBackend",
-           "serve_workload", "summarize_responses"]
+           "serve_workload", "serve_prompts", "summarize_responses"]
 
 # SLO classes (paper's two-class workload: tail-latency vs deadline)
 INTERACTIVE = "interactive"
@@ -148,6 +148,25 @@ def serve_workload(backend: ServingBackend,
     return backend.drain()
 
 
+def serve_prompts(backend: ServingBackend, prompts: Sequence,
+                  n_new: int = 8, arrival_s: Optional[Sequence[float]] = None
+                  ) -> Dict[str, float]:
+    """Bulk-prompt convenience over the typed path: wrap bare token lists
+    into :class:`InferenceRequest`s (rid = position), drain, and return the
+    backend's session stats.  The one-liner examples/benchmarks use now
+    that the engine's ``serve(prompts=...)`` shim is gone — callers that
+    need per-request metadata build their own requests."""
+    if arrival_s is not None:
+        assert len(arrival_s) == len(prompts)
+    for i, p in enumerate(prompts):
+        backend.submit(InferenceRequest(
+            rid=i, prompt=np.asarray(p, np.int32).reshape(-1),
+            max_new_tokens=n_new,
+            arrival_s=None if arrival_s is None else float(arrival_s[i])))
+    backend.drain()
+    return backend.stats()
+
+
 def summarize_responses(responses: Sequence[InferenceResponse]
                         ) -> Dict[str, float]:
     """Cross-backend workload summary (per-class tails + attribution sums)."""
@@ -171,4 +190,9 @@ def summarize_responses(responses: Sequence[InferenceResponse]
             [r.ttft_s for r in inter], 95.0)
     if defer:
         out["deferrable_served"] = len(defer)
+        # the carbon policies move exactly this number: deferrable work's
+        # attributed gCO2 (held work served in a cleaner window shows here)
+        out["deferrable_carbon_g"] = sum(r.carbon_g for r in defer)
+        out["deferrable_queue_delay_p95_s"] = latency_percentile(
+            [r.queue_delay_s for r in defer], 95.0)
     return out

@@ -62,12 +62,20 @@ class RealWindowServer(SIM.FluidServer):
     def __init__(self, variants: Sequence[Variant], acct: CB.CarbonAccountant,
                  sla_target_s: float, *, engine, probe_requests: int = 4,
                  prompt_len: int = 6, n_new: int = 4, seed: int = 0,
-                 sla_slack: float = 1.001):
+                 sla_slack: float = 1.001, ci_fn=None,
+                 deferrable_frac: float = 0.0, probe_deadline_s: float = 2.0):
         super().__init__(variants, acct, sla_target_s, sla_slack)
         self.engine = engine
         self.probe_requests = probe_requests
         self.prompt_len = prompt_len
         self.n_new = n_new
+        # forecaster-driven policy support: ``ci_fn`` is the
+        # fleet.forecast.ForecastCIFn the engine's carbon policy reads;
+        # probe_window re-anchors its epoch to each window's trace time so
+        # the policy's session-relative clock lands on the right grid
+        self.ci_fn = ci_fn
+        self.deferrable_frac = deferrable_frac
+        self.probe_deadline_s = probe_deadline_s
         self._rng = np.random.default_rng(seed)
         self._vocab = next(iter(engine.family.values())).cfg.vocab_size
         self._configured_edges = None
@@ -104,14 +112,22 @@ class RealWindowServer(SIM.FluidServer):
             return None
         self.apply_config(g)
         self.engine.ci_g_per_kwh = self.acct.trace.at(t)
+        if self.ci_fn is not None:
+            # the carbon policy's session clock starts at ~0 every probe:
+            # anchor the forecaster onto this window's trace time
+            self.ci_fn.set_epoch(t)
+        n_defer = int(round(self.probe_requests * self.deferrable_frac))
         reqs = []
-        for _ in range(self.probe_requests):
+        for i in range(self.probe_requests):
+            defer = i < n_defer
             reqs.append(InferenceRequest(
                 rid=self._rid,
                 prompt=self._rng.integers(0, self._vocab,
                                           size=(self.prompt_len,)
                                           ).astype(np.int32),
-                max_new_tokens=self.n_new))
+                max_new_tokens=self.n_new,
+                slo=DEFERRABLE if defer else INTERACTIVE,
+                deadline_s=self.probe_deadline_s if defer else None))
             self._rid += 1
         responses = serve_workload(self.engine, reqs)
         m = self.engine.stats()

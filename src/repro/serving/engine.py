@@ -47,8 +47,14 @@ The serving surface is the ``ServingBackend`` protocol (``serving.api``):
     and restores it bit-exactly on re-admission — greedy outputs are
     preemption-invariant, replacing the conservative whole-sequence
     reservation;
-  * ``RealEngine.serve(prompts=...)`` survives as a one-PR deprecation shim
-    over the request path (token-identical, ``DeprecationWarning``);
+  * **policy-aware prefill queue** (paged): inside a tick's chunked-prefill
+    burst budget the active policy orders the instance's prefill queue, so
+    an interactive admission's chunks preempt a long background prefill
+    mid-prompt instead of queueing behind it in admission order;
+  * **partial swap-in**: a preempted sequence whose prompt blocks the radix
+    tree still holds is restored by re-referencing those pages and copying
+    back only the evicted tail (``partial_swapin_pages_saved`` in stats) —
+    still bit-exact, a tree eviction just degrades to the full restore;
   * **open-loop serving**: requests with ``arrival_s`` release on a wall-
     clock schedule (``serve_poisson`` draws one), so queueing delay and TTFT
     are measured at sub-saturation loads instead of only closed-batch
@@ -66,7 +72,6 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import time
-import warnings
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -78,7 +83,8 @@ from repro.core import perf_model as PM
 from repro.core.catalog import Variant
 from repro.models import registry as R
 from repro.models.config import ModelConfig
-from repro.serving.api import DONE, InferenceRequest, InferenceResponse
+from repro.serving.api import DONE, InferenceRequest, InferenceResponse, \
+    serve_prompts
 from repro.serving.kvpool import BlockAllocator, RadixPrefixCache
 from repro.serving.policies import SchedulerPolicy, make_policy
 from repro.serving.scheduler import SchedulerCore, latency_percentile
@@ -227,7 +233,15 @@ class _SwapState:
     decode token, and the K/V contents of the blocks it held (``n_ctx``
     valid positions).  Restoring writes the pages back into freshly
     allocated arena blocks, so greedy decode continues on identical state
-    and outputs are preemption-invariant."""
+    and outputs are preemption-invariant.
+
+    ``tree_blocks`` records how many of the sequence's leading pages were
+    radix-tree-resident at swap-out (full prompt blocks the prefix cache
+    still holds).  On re-admission those pages are re-acquired from the
+    tree instead of copied from ``host_k``/``host_v`` — a PARTIAL swap-in
+    that restores only the evicted tail.  The host image still covers every
+    page, so a tree eviction between swap-out and resume just degrades back
+    to a full restore."""
     rid: int
     t_arrival: float
     prompt: np.ndarray
@@ -242,6 +256,9 @@ class _SwapState:
     preempts: int
     host_k: np.ndarray             # (L, n_blocks_used, bs, K, dh)
     host_v: np.ndarray
+    tree_blocks: int = 0           # leading pages tree-backed at swap-out
+    slo: str = "interactive"
+    deadline_s: Optional[float] = None
 
     @property
     def n_blocks(self) -> int:
@@ -336,10 +353,14 @@ class Instance:
         return any(s is None for s in self.slots)
 
     def admit_next(self, rid: int, t_arrival: float, prompt: np.ndarray,
-                   n_new: int, priority: int = 0
+                   n_new: int, priority: int = 0, slo: str = "interactive",
+                   deadline_s: Optional[float] = None
                    ) -> Tuple[_SlotState, float]:
         """Admit into the first free slot; returns (state, prefill seconds)
-        — the engine charges prefill at full busy power."""
+        — the engine charges prefill at full busy power.  ``slo`` /
+        ``deadline_s`` are accepted for the uniform instance surface; the
+        slotted layout prefills at admission, so there is no prefill queue
+        for a policy to order."""
         slot = self.free_slots()[0]
         t1 = time.perf_counter()
         state = self.admit(slot, rid, t_arrival, prompt, n_new,
@@ -398,9 +419,10 @@ class Instance:
                 self.slots[i] = None
         return finished, emitted
 
-    def tick(self) -> Tuple[List[_SlotState], Dict[str, object]]:
+    def tick(self, now: Optional[float] = None
+             ) -> Tuple[List[_SlotState], Dict[str, object]]:
         """One scheduler tick = one batched decode step (slotted prefill
-        runs at admission)."""
+        runs at admission; ``now`` is unused here — uniform tick surface)."""
         occ = self.occupied
         if occ == 0:
             return [], _tick_info()
@@ -452,7 +474,14 @@ class Instance:
 # =============================================================================
 @dataclasses.dataclass
 class _PagedSeq:
-    """Host-side state of one sequence in a paged instance."""
+    """Host-side state of one sequence in a paged instance.
+
+    Carries the request's scheduling metadata (``priority``/``slo``/
+    ``deadline_s``) plus a stable admission counter ``seq``, matching the
+    attribute contract of ``scheduler._Entry`` — so the engine's active
+    :class:`~repro.serving.policies.SchedulerPolicy` can order the
+    instance-level chunked-prefill queue with the same ``select`` it uses
+    for admission."""
     rid: int
     t_arrival: float
     prompt: np.ndarray
@@ -466,6 +495,9 @@ class _PagedSeq:
     t_first: Optional[float] = None
     priority: int = 0
     preempts: int = 0               # times this sequence was swapped out
+    slo: str = "interactive"
+    deadline_s: Optional[float] = None
+    seq: int = 0                    # admission order (policy tie-break)
 
     @property
     def prefilled(self) -> bool:
@@ -493,7 +525,8 @@ class PagedInstance:
                  block_size: int = 16, max_seqs: int = 8, max_len: int = 96,
                  chunk_blocks: int = 2, prefix_caching: bool = True,
                  cache_watermark: float = 0.25, chunk_burst: int = 4,
-                 preemption: bool = False):
+                 preemption: bool = False,
+                 policy: Optional[SchedulerPolicy] = None):
         self.ev = ev
         self.chips = chips
         self.block_size = block_size
@@ -509,6 +542,9 @@ class PagedInstance:
         # the chains the next FIFO request was about to hit (cache thrash)
         self.cache_watermark = cache_watermark
         self.preemption = preemption
+        # the engine's admission policy also orders THIS instance's chunked-
+        # prefill queue (None / is_fifo → admission-order, the old behavior)
+        self.policy = policy
         self._fns = _paged_fns(ev)
         self.arena = R.make_block_arena(ev.cfg, n_blocks, block_size,
                                         dtype=jnp.float32)
@@ -520,9 +556,15 @@ class PagedInstance:
         self.lengths = np.zeros((max_seqs,), np.int32)
         self._next = np.zeros((max_seqs, 1), np.int32)
         self._prefillq: Deque[_PagedSeq] = deque()
+        self._adm_seq = 0                # admission counter (policy tie-break)
         self.prefill_chunks = 0
         self.prefix_hit_tokens = 0
         self.preemptions = 0
+        # swap-in page accounting: ``total`` counts the pages a FULL restore
+        # would have written back, ``copied`` the pages actually written —
+        # the gap is what the radix tree's surviving blocks saved
+        self.swapin_pages_total = 0
+        self.swapin_pages_copied = 0
 
     # --- lifecycle -----------------------------------------------------------
     def reset(self) -> None:
@@ -600,7 +642,8 @@ class PagedInstance:
 
     # --- admission -----------------------------------------------------------
     def admit_next(self, rid: int, t_arrival: float, prompt: np.ndarray,
-                   n_new: int, priority: int = 0
+                   n_new: int, priority: int = 0, slo: str = "interactive",
+                   deadline_s: Optional[float] = None
                    ) -> Tuple[_PagedSeq, float]:
         """Reserve blocks + a batch row; NO forward pass happens here —
         prefill is chunked across subsequent ticks (so admission never
@@ -620,7 +663,9 @@ class PagedInstance:
         blocks = matched + self.alloc.alloc(need)
         seq = _PagedSeq(rid, t_arrival, prompt, n_new, row, blocks,
                         n_done=n_cached, cached_tokens=n_cached,
-                        remaining=n_new, priority=priority)
+                        remaining=n_new, priority=priority, slo=slo,
+                        deadline_s=deadline_s, seq=self._adm_seq)
+        self._adm_seq += 1
         self.tables[row, :len(blocks)] = blocks
         self.tables[row, len(blocks):] = 0
         self.lengths[row] = 0            # row inactive until prefill completes
@@ -639,25 +684,43 @@ class PagedInstance:
         return self._avail_blocks() >= swap.n_blocks
 
     def resume(self, swap: _SwapState) -> Tuple[_PagedSeq, float]:
-        """Restore a preempted sequence: fresh blocks, the host K/V pages
-        written back, lengths/next-token exactly as at swap-out — greedy
-        decode continues on bit-identical state."""
+        """Restore a preempted sequence — PARTIALLY when the radix tree
+        still holds its prompt blocks.
+
+        The leading pages recorded tree-backed at swap-out are re-acquired
+        from the prefix cache (``match_full``: a reference per block, no
+        device copy — their K/V never left the arena); only the evicted
+        tail pages are written back from the host image.  If the tree
+        dropped the nodes in the meantime the match comes back short and
+        the difference is restored from host — bit-exact either way, so
+        greedy decode continues on identical state."""
         row = self.rows.index(None)
         nb = swap.n_blocks
-        if nb > self.alloc.num_free and self.prefix is not None:
-            self.prefix.evict(nb - self.alloc.num_free)
-        blocks = self.alloc.alloc(nb)
-        idx = jnp.asarray(np.asarray(blocks, np.int32))
-        self.arena["k"] = self.arena["k"].at[:, idx].set(
-            jnp.asarray(swap.host_k))
-        self.arena["v"] = self.arena["v"].at[:, idx].set(
-            jnp.asarray(swap.host_v))
+        reused: List[int] = []
+        if self.prefix is not None and swap.tree_blocks > 0:
+            reused = self.prefix.match_full(
+                swap.prompt, max_blocks=min(swap.tree_blocks, nb))
+        n_tail = nb - len(reused)
+        if n_tail > self.alloc.num_free and self.prefix is not None:
+            self.prefix.evict(n_tail - self.alloc.num_free)
+        tail = self.alloc.alloc(n_tail)
+        if n_tail:
+            idx = jnp.asarray(np.asarray(tail, np.int32))
+            self.arena["k"] = self.arena["k"].at[:, idx].set(
+                jnp.asarray(swap.host_k[:, len(reused):]))
+            self.arena["v"] = self.arena["v"].at[:, idx].set(
+                jnp.asarray(swap.host_v[:, len(reused):]))
+        blocks = reused + tail
+        self.swapin_pages_total += nb
+        self.swapin_pages_copied += n_tail
         seq = _PagedSeq(swap.rid, swap.t_arrival, swap.prompt, swap.n_new,
                         row, blocks, n_done=len(swap.prompt),
                         cached_tokens=swap.cached_tokens,
                         remaining=swap.remaining, tokens=list(swap.tokens),
                         t_first=swap.t_first, priority=swap.priority,
-                        preempts=swap.preempts)
+                        preempts=swap.preempts, slo=swap.slo,
+                        deadline_s=swap.deadline_s, seq=self._adm_seq)
+        self._adm_seq += 1
         self.tables[row, :nb] = blocks
         self.tables[row, nb:] = 0
         self.lengths[row] = swap.n_ctx
@@ -678,10 +741,20 @@ class PagedInstance:
 
     def _swap_out(self, seq: _PagedSeq) -> _SwapState:
         """Swap a sequence's K/V pages to host memory and release its arena
-        blocks + batch row.  The engine re-queues the returned image."""
+        blocks + batch row.  The engine re-queues the returned image.
+
+        ``tree_blocks`` snapshots how many leading pages the radix tree
+        backs at this instant (full prompt blocks the cache still maps):
+        those are the pages ``resume`` will try to re-acquire by reference
+        instead of copying back.  The host image still saves every page —
+        the snapshot is a ceiling, not a promise, because LRU eviction may
+        drop the nodes before re-admission."""
         n_ctx = int(self.lengths[seq.row])
         nb = self.alloc.blocks_for_tokens(max(n_ctx, 1))
         used = np.asarray(seq.blocks[:nb], np.int32)
+        tree_blocks = 0
+        if self.prefix is not None:
+            tree_blocks = self.prefix.live_prefix_blocks(seq.prompt, limit=nb)
         swap = _SwapState(
             rid=seq.rid, t_arrival=seq.t_arrival, prompt=seq.prompt,
             n_new=seq.n_new, priority=seq.priority, tokens=list(seq.tokens),
@@ -689,7 +762,8 @@ class PagedInstance:
             next_token=int(self._next[seq.row, 0]), t_first=seq.t_first,
             cached_tokens=seq.cached_tokens, preempts=seq.preempts + 1,
             host_k=np.asarray(self.arena["k"][:, used]),
-            host_v=np.asarray(self.arena["v"][:, used]))
+            host_v=np.asarray(self.arena["v"][:, used]),
+            tree_blocks=tree_blocks, slo=seq.slo, deadline_s=seq.deadline_s)
         self.alloc.free(seq.blocks)      # decref: prefix-tree refs survive
         self._clear_row(seq)
         self.preemptions += 1
@@ -810,16 +884,33 @@ class PagedInstance:
         return sum(1 for s in self.rows
                    if s is not None and s.prefilled and s.remaining > 0)
 
-    def tick(self) -> Tuple[List[_PagedSeq], Dict[str, object]]:
+    def _next_prefill(self, now: Optional[float]) -> int:
+        """Index into ``_prefillq`` of the next chunk to advance, delegated
+        to the engine's admission policy: under ``priority``/``edf``/the
+        carbon policies an interactive admission's chunks preempt a long
+        background prefill *mid-prompt* inside the same burst budget,
+        instead of queueing behind it in admission order.  FIFO (or no
+        policy) keeps the original head-first behavior; a policy hold falls
+        back to the head too (``select_prefill`` — admitted work holds
+        blocks, parking it only strands memory)."""
+        if (self.policy is None or getattr(self.policy, "is_fifo", False)
+                or len(self._prefillq) == 1):
+            return 0
+        return self.policy.select_prefill(list(self._prefillq), now)
+
+    def tick(self, now: Optional[float] = None
+             ) -> Tuple[List[_PagedSeq], Dict[str, object]]:
         """One scheduler tick: an adaptive prefill budget, then one batched
-        decode step over all decoding rows.
+        decode step over all decoding rows.  ``now`` is the engine's
+        session-relative clock, passed through to the policy ordering the
+        prefill queue (deadline / CI decisions).
 
         Prefill policy: while the batch is decode-starved (fewer decodable
-        rows than half the row capacity), burst up to ``chunk_burst`` FIFO
-        chunks — stalling nobody, since there is little to stall — and back
-        off to a SINGLE chunk per tick once decode concurrency is healthy,
-        so a 512-token admission interleaves with running decodes instead
-        of pausing them for its whole prefill."""
+        rows than half the row capacity), burst up to ``chunk_burst``
+        policy-ordered chunks — stalling nobody, since there is little to
+        stall — and back off to a SINGLE chunk per tick once decode
+        concurrency is healthy, so a 512-token admission interleaves with
+        running decodes instead of pausing them for its whole prefill."""
         finished: List[_PagedSeq] = []
         emitted: List[Tuple[int, int]] = []
         prefill_rids: List[Tuple[int, float]] = []
@@ -832,7 +923,8 @@ class PagedInstance:
                 if burst > 0 and self._decodable() >= max(
                         1, min(self.occupied, self.max_seqs // 2)):
                     break                        # decode is busy: yield
-                seq = self._prefillq[0]
+                qi = self._next_prefill(now)
+                seq = self._prefillq[qi]
                 tc = time.perf_counter()
                 self._prefill_chunk(seq)
                 dtc = time.perf_counter() - tc
@@ -841,7 +933,7 @@ class PagedInstance:
                 burst += 1
                 if seq.prefilled:
                     emitted.append((seq.rid, seq.tokens[-1]))
-                    self._prefillq.popleft()
+                    del self._prefillq[qi]
                     if seq.remaining <= 0:       # n_new == 1
                         finished.append(seq)
                         self._release(seq)
@@ -931,6 +1023,10 @@ class _Session:
         self.chunks0 = sum(getattr(i, "prefill_chunks", 0) for i in instances)
         self.hits0 = sum(getattr(i, "prefix_hit_tokens", 0)
                          for i in instances)
+        self.swap_total0 = sum(getattr(i, "swapin_pages_total", 0)
+                               for i in instances)
+        self.swap_copied0 = sum(getattr(i, "swapin_pages_copied", 0)
+                                for i in instances)
 
     def schedule(self, req: InferenceRequest) -> None:
         if req.arrival_s is None:
@@ -999,7 +1095,8 @@ class RealEngine:
                                  max_len=self.max_len,
                                  chunk_blocks=self.chunk_blocks,
                                  prefix_caching=self.prefix_caching,
-                                 preemption=self.preemption)
+                                 preemption=self.preemption,
+                                 policy=self.policy)
         return Instance(ev, chips, self.n_slots, self.max_len)
 
     def configure(self, graph) -> float:
@@ -1093,7 +1190,9 @@ class RealEngine:
                 else:
                     state, dt = inst.admit_next(rid, t_arr, req.prompt,
                                                 req.max_new_tokens,
-                                                priority=req.priority)
+                                                priority=req.priority,
+                                                slo=req.slo,
+                                                deadline_s=req.deadline_s)
                     s.admit_t[rid] = t1
                     s.queue_delays.append(t1 - t_arr)
                     s.admit_order.append(rid)
@@ -1114,7 +1213,7 @@ class RealEngine:
             s.progressed = True
             s.admitted_sum += inst.occupied   # holding cache memory now
             s.tick_samples += 1
-            done, info = inst.tick()
+            done, info = inst.tick(s.rel(time.perf_counter()))
             s.energy += inst.chips * PM.P_BUSY_W * info["prefill_s"]
             for rid, dtc in info["prefill_rids"]:
                 s.meters[rid] += inst.chips * PM.P_BUSY_W * dtc
@@ -1253,34 +1352,28 @@ class RealEngine:
                                   for i in self.instances) - s.chunks0,
             "prefix_hit_tokens": sum(getattr(i, "prefix_hit_tokens", 0)
                                      for i in self.instances) - s.hits0,
+            # partial swap-in: pages a full restore would have copied vs
+            # pages actually written back (the gap = tree-resident reuse)
+            "swapin_pages_copied": sum(getattr(i, "swapin_pages_copied", 0)
+                                       for i in self.instances)
+                                   - s.swap_copied0,
+            "partial_swapin_pages_saved":
+                (sum(getattr(i, "swapin_pages_total", 0)
+                     for i in self.instances) - s.swap_total0)
+                - (sum(getattr(i, "swapin_pages_copied", 0)
+                       for i in self.instances) - s.swap_copied0),
         }
         self._session = None
 
-    # --- legacy surface ------------------------------------------------------
-    def serve(self, prompts: Sequence[np.ndarray], n_new: int = 8,
-              arrival_s: Optional[Sequence[float]] = None
-              ) -> Dict[str, float]:
-        """DEPRECATED one-PR shim over the request path: wraps bare token
-        lists into :class:`InferenceRequest`s (rid = position) and returns
-        the session stats — token-identical to submit()/drain()."""
-        warnings.warn(
-            "RealEngine.serve(prompts=...) is deprecated; build "
-            "serving.api.InferenceRequest objects and drive the engine "
-            "through submit()/drain() (ServingBackend protocol)",
-            DeprecationWarning, stacklevel=2)
-        return self._serve_prompts(prompts, n_new, arrival_s)
-
+    # --- bulk-prompt convenience ---------------------------------------------
     def _serve_prompts(self, prompts: Sequence[np.ndarray], n_new: int = 8,
                        arrival_s: Optional[Sequence[float]] = None
                        ) -> Dict[str, float]:
-        if arrival_s is not None:
-            assert len(arrival_s) == len(prompts)
-        for i, p in enumerate(prompts):
-            self.submit(InferenceRequest(
-                rid=i, prompt=p, max_new_tokens=n_new,
-                arrival_s=None if arrival_s is None else float(arrival_s[i])))
-        self.drain()
-        return self.stats()
+        """Method shorthand for :func:`serving.api.serve_prompts` — kept
+        for ``serve_poisson`` and tests that only care about prompts; the
+        public surface is the typed ``ServingBackend`` protocol (the
+        ``serve(prompts=...)`` deprecation shim is gone)."""
+        return serve_prompts(self, prompts, n_new, arrival_s)
 
     def serve_poisson(self, rate_rps: float, n_requests: int,
                       prompt_lens: Sequence[int] = (6,), n_new: int = 8,

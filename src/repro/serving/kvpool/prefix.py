@@ -70,6 +70,19 @@ class RadixPrefixCache:
             stack.extend(n.children.values())
         return out
 
+    def _walk(self, tokens: Sequence[int], n: int) -> List[_Node]:
+        """Tree nodes along the longest cached path of the first ``n``
+        block-chunks of ``tokens`` (pure read: no refs, no LRU bump)."""
+        nodes: List[_Node] = []
+        level = self._root
+        for chunk in self._chunks(tokens, n):
+            node = level.get(chunk)
+            if node is None:
+                break
+            nodes.append(node)
+            level = node.children
+        return nodes
+
     # --- lookup --------------------------------------------------------------
     def match(self, tokens: Sequence[int]) -> Tuple[List[int], int]:
         """Longest cached block-aligned prefix of ``tokens``.
@@ -80,21 +93,52 @@ class RadixPrefixCache:
         first generated token must come from real last-position logits."""
         usable = max((len(tokens) - 1) // self.block_size, 0)
         self._clock += 1
+        nodes = self._walk(tokens, usable)
         blocks: List[int] = []
-        level = self._root
-        for chunk in self._chunks(tokens, usable):
-            node = level.get(chunk)
-            if node is None:
-                break
+        for node in nodes:
             node.last_used = self._clock
             blocks.append(node.block)
-            level = node.children
         if blocks:
             self.alloc.incref(blocks)
             self.hits += len(blocks)
         else:
             self.misses += 1
         return blocks, len(blocks) * self.block_size
+
+    # --- block liveness (partial swap-in) ------------------------------------
+    def live_prefix_blocks(self, tokens: Sequence[int],
+                           limit: Optional[int] = None) -> int:
+        """How many leading FULL block-chunks of ``tokens`` are tree-resident
+        right now.  Pure liveness query — no references taken, no LRU bump —
+        used at swap-out to record which of a victim's pages the tree still
+        backs (the candidates for a partial swap-in)."""
+        n = len(tokens) // self.block_size
+        if limit is not None:
+            n = min(n, limit)
+        return len(self._walk(tokens, n))
+
+    def match_full(self, tokens: Sequence[int],
+                   max_blocks: Optional[int] = None) -> List[int]:
+        """Re-acquire the tree-resident prefix of an already-prefilled
+        prompt, over ALL its full blocks (no one-token-short cap — the
+        caller already owns real last-position logits from its original
+        prefill).  One caller-owned reference is taken per returned block;
+        LRU recency is bumped.  This is the swap-in path: every block
+        returned is a page whose K/V the engine does NOT have to copy back
+        from the host image."""
+        n = len(tokens) // self.block_size
+        if max_blocks is not None:
+            n = min(n, max_blocks)
+        self._clock += 1
+        nodes = self._walk(tokens, n)
+        blocks: List[int] = []
+        for node in nodes:
+            node.last_used = self._clock
+            blocks.append(node.block)
+        if blocks:
+            self.alloc.incref(blocks)
+            self.hits += len(blocks)
+        return blocks
 
     # --- registration --------------------------------------------------------
     def insert(self, tokens: Sequence[int], block_table: Sequence[int]) -> int:

@@ -17,7 +17,7 @@ from __future__ import annotations
 from typing import Callable, Optional, Sequence
 
 __all__ = ["SchedulerPolicy", "FIFOPolicy", "PriorityPolicy", "EDFPolicy",
-           "CarbonAwarePolicy", "make_policy"]
+           "CarbonAwarePolicy", "CarbonForecastPolicy", "make_policy"]
 
 
 class SchedulerPolicy:
@@ -34,6 +34,18 @@ class SchedulerPolicy:
     def select(self, entries: Sequence, now: Optional[float] = None
                ) -> Optional[int]:
         raise NotImplementedError
+
+    def select_prefill(self, entries: Sequence, now: Optional[float] = None
+                       ) -> int:
+        """Ordering for an instance's chunked-prefill queue.
+
+        Same selection as admission, with one difference: a prefill queue
+        can never be HELD — every entry is already admitted and is holding
+        arena blocks, so parking it (as the carbon policies park deferrable
+        *admissions* under a dirty grid) would only strand memory.  A
+        policy that would hold falls back to the FIFO head."""
+        idx = self.select(entries, now)
+        return 0 if idx is None else idx
 
 
 class FIFOPolicy(SchedulerPolicy):
@@ -81,7 +93,11 @@ class CarbonAwarePolicy(SchedulerPolicy):
     (``ci_fn(now) > ci_threshold``) and released EDF when it cleans up — or
     force-released regardless of CI once their deadline runway
     (``deadline_s − now``) shrinks below the estimated service time plus
-    margin, so a long dirty spell can never turn a hold into a miss."""
+    margin, so a long dirty spell can never turn a hold into a miss.
+
+    ``ci_fn`` may be any ``ci_fn(now) → gCO2/kWh`` callable — a raw trace
+    lookup, or a :class:`repro.fleet.forecast.ForecastCIFn` nowcast so this
+    policy and :class:`CarbonForecastPolicy` share one CI source."""
 
     name = "carbon"
 
@@ -117,15 +133,119 @@ class CarbonAwarePolicy(SchedulerPolicy):
                                   else inf, entries[i].seq))
 
 
+class CarbonForecastPolicy(SchedulerPolicy):
+    """Forecast-driven two-class admission (the Clover/EcoServe coupling:
+    act on *predicted* carbon, not the instantaneous grid).
+
+    Interactive requests always flow (FIFO).  Each deferrable request is
+    scheduled against the **forecast valley inside its own deadline
+    runway**: ``ci_fn(now, h)`` is sampled every ``step_s`` out to
+    ``min(horizon_s, runway)``, where runway = ``deadline_s − now −
+    est_service_s − deadline_margin_s`` (deadline-less requests get the
+    full horizon).  The request is released when
+
+      * the nowcast is already within ``valley_tolerance`` of the best
+        forecast CI it can still reach — waiting cannot pay; this includes
+        a forecast that is flat or *rising* through the whole runway, where
+        the raw-threshold policy would still sit out the dirty spell; or
+      * the nowcast is under ``ci_threshold`` (optional absolute clean-grid
+        fast path, matching :class:`CarbonAwarePolicy`); or
+      * the runway is exhausted (force-release — a wrong forecast can never
+        turn a hold into a deadline miss).
+
+    Released candidates drain EDF.  ``ci_fn`` must accept ``(now,
+    horizon_s)`` — :class:`repro.fleet.forecast.ForecastCIFn` adapts the
+    fleet's forecaster ensemble to exactly this contract.  Forecast series
+    are memoized per (now, runway) quantized to ``step_s``, so a busy
+    engine tick doesn't re-run the forecaster per queued entry."""
+
+    name = "carbon_forecast"
+
+    def __init__(self, ci_fn: Callable[..., float], horizon_s: float,
+                 step_s: Optional[float] = None,
+                 est_service_s: float = 0.0, deadline_margin_s: float = 0.0,
+                 valley_tolerance: float = 0.05,
+                 ci_threshold: Optional[float] = None):
+        assert horizon_s > 0.0, "need a positive forecast horizon"
+        self.ci_fn = ci_fn
+        self.horizon_s = horizon_s
+        self.step_s = step_s if step_s is not None else horizon_s / 12.0
+        self.est_service_s = est_service_s
+        self.deadline_margin_s = deadline_margin_s
+        self.valley_tolerance = valley_tolerance
+        self.ci_threshold = ci_threshold
+        self._memo: dict = {}          # (now_q, runway_q) → valley CI
+
+    def _runway(self, e, now: float) -> float:
+        if e.deadline_s is None:
+            return self.horizon_s
+        return (e.deadline_s - now - self.est_service_s
+                - self.deadline_margin_s)
+
+    def _valley(self, now: float, runway: float) -> float:
+        """Lowest forecast CI reachable within ``runway`` seconds.  The memo
+        key includes the ci_fn's epoch (``ForecastCIFn.t0``): a re-anchored
+        clock (fleet probe windows) must not serve valleys forecast for a
+        different stretch of the grid."""
+        h_max = min(runway, self.horizon_s)
+        key = (round(now / self.step_s), round(h_max / self.step_s),
+               getattr(self.ci_fn, "t0", 0.0))
+        hit = self._memo.get(key)
+        if hit is not None:
+            return hit
+        valley = float("inf")
+        h = self.step_s
+        while h <= h_max + 1e-9:
+            valley = min(valley, self.ci_fn(now, h))
+            h += self.step_s
+        if valley == float("inf"):
+            # runway shorter than one step: still consult the forecast at
+            # the runway's end instead of skipping the valley check entirely
+            valley = self.ci_fn(now, h_max)
+        if len(self._memo) > 4096:     # bounded: one serve session's worth
+            self._memo.clear()
+        self._memo[key] = valley
+        return valley
+
+    def _release(self, e, now: float, ci_now: float) -> bool:
+        runway = self._runway(e, now)
+        if runway <= 0.0:
+            return True                              # force-release
+        if self.ci_threshold is not None and ci_now <= self.ci_threshold:
+            return True                              # grid already clean
+        valley = self._valley(now, runway)
+        return ci_now <= valley * (1.0 + self.valley_tolerance)
+
+    def select(self, entries, now=None):
+        for i, e in enumerate(entries):        # interactive: plain FIFO
+            if e.slo == "interactive":
+                return i
+        if not entries:
+            return None
+        now_f = float(now) if now is not None else 0.0
+        ci_now = self.ci_fn(now_f, 0.0)
+        candidates = [i for i, e in enumerate(entries)
+                      if self._release(e, now_f, ci_now)]
+        if not candidates:
+            return None                        # hold: a better valley is near
+        inf = float("inf")
+        return min(candidates,
+                   key=lambda i: (entries[i].deadline_s
+                                  if entries[i].deadline_s is not None
+                                  else inf, entries[i].seq))
+
+
 def make_policy(name, **kwargs) -> SchedulerPolicy:
     """Resolve a policy by name (``SchedulerPolicy`` instances pass
-    through).  ``carbon`` requires ``ci_fn`` and ``ci_threshold``."""
+    through).  ``carbon`` requires ``ci_fn`` and ``ci_threshold``;
+    ``carbon_forecast`` requires ``ci_fn`` and ``horizon_s``."""
     if isinstance(name, SchedulerPolicy):
         return name
     if name is None:
         return FIFOPolicy()
     table = {"fifo": FIFOPolicy, "priority": PriorityPolicy, "edf": EDFPolicy,
-             "carbon": CarbonAwarePolicy}
+             "carbon": CarbonAwarePolicy,
+             "carbon_forecast": CarbonForecastPolicy}
     key = str(name).lower()
     if key not in table:
         raise ValueError(f"unknown scheduling policy {name!r} "

@@ -229,6 +229,14 @@ class DESBackend:
     Tokens are never generated (``response.tokens is None``) — this backend
     answers scheduling questions (policy orderings, deadline attainment,
     carbon accounting) six orders of magnitude faster than real execution.
+
+    ``ci_g_per_kwh`` may be a constant or a ``ci(now) → gCO2/kWh`` callable
+    on the simulated clock (e.g. ``trace.at``): with a time-varying grid a
+    request's busy joules are attributed at the CI of its own service
+    midpoint and the idle floor at the session-mean CI — so holding work
+    into a cleaner window (the carbon policies' whole point) is visible in
+    per-request ``carbon_g``, and the responses still sum exactly to
+    ``stats()['carbon_g']``.
     """
 
     _ARRIVE, _FINISH = 0, 1
@@ -236,7 +244,8 @@ class DESBackend:
     def __init__(self, g: CG.ConfigGraph, variants: Sequence[Variant],
                  des: DESConfig = DESConfig(),
                  policy: Union[str, SchedulerPolicy, None] = "fifo",
-                 ci_g_per_kwh: float = 0.0, tokens_ref: int = 8,
+                 ci_g_per_kwh: Union[float, Callable[[float], float]] = 0.0,
+                 tokens_ref: int = 8,
                  hold_retry_s: float = 60.0):
         self.g = g
         self.des = des
@@ -260,6 +269,7 @@ class DESBackend:
         self._seq = 0
         self._reqs: Dict[int, InferenceRequest] = {}
         self._meters: Dict[int, float] = {}
+        self._carbon: Dict[int, float] = {}      # busy gCO2 at service-time CI
         self._starts: Dict[int, float] = {}
         self._responses: List[InferenceResponse] = []   # step's delta buffer
         self._done: List[InferenceResponse] = []        # whole session
@@ -271,7 +281,25 @@ class DESBackend:
         assert req.rid not in self._reqs, f"duplicate rid {req.rid}"
         self._reqs[req.rid] = req
         self._meters[req.rid] = 0.0
+        self._carbon[req.rid] = 0.0
         self._push(req.arrival_s or 0.0, self._ARRIVE, (req.rid,))
+
+    # --- carbon intensity ----------------------------------------------------
+    def _ci_at(self, t: float) -> float:
+        ci = self.ci_g_per_kwh
+        return float(ci(t)) if callable(ci) else float(ci)
+
+    def _ci_mean(self, t_end: float) -> float:
+        """Session-mean CI for the idle floor (trapezoid over the session
+        span; exact for a constant grid)."""
+        if not callable(self.ci_g_per_kwh):
+            return float(self.ci_g_per_kwh)
+        if t_end <= 0.0:
+            return self._ci_at(0.0)
+        import numpy as _np
+        ts = _np.linspace(0.0, t_end, 65)
+        return float(_np.trapezoid([self._ci_at(float(t)) for t in ts], ts)
+                     / t_end)
 
     def step(self) -> List[InferenceResponse]:
         """Process one event off the heap (advancing the simulated clock).
@@ -339,8 +367,11 @@ class DESBackend:
             inst.busy = True
             inst.current = (rid, t_arr)
             self._starts[rid] = self.now
-            self._meters[rid] += inst.chips * PM.P_BUSY_W * svc
-            self._busy_j += inst.chips * PM.P_BUSY_W * svc
+            busy_j = inst.chips * PM.P_BUSY_W * svc
+            self._meters[rid] += busy_j
+            self._carbon[rid] += busy_j / 3.6e6 * self._ci_at(self.now
+                                                              + 0.5 * svc)
+            self._busy_j += busy_j
             self._push(self.now + svc, self._FINISH, (inst.idx, rid, t_arr))
 
     def _complete(self, rid: int, t_arr: float, inst: _Instance) -> None:
@@ -366,9 +397,15 @@ class DESBackend:
         idle_j = idle_chip_s * PM.P_IDLE_W
         total_j = self._busy_j + idle_j
         share = idle_j / len(responses) if responses else 0.0
+        idle_g = idle_j / 3.6e6 * self._ci_mean(self.now)
+        share_g = idle_g / len(responses) if responses else 0.0
         for r in responses:
             r.energy_j += share
-            r.carbon_g = r.energy_j / 3.6e6 * self.ci_g_per_kwh
+            # busy gCO2 at each dispatch's service-midpoint CI + an equal
+            # share of the idle floor at session-mean CI; for a constant
+            # grid this is exactly energy_j × ci
+            r.carbon_g = self._carbon.get(r.rid, 0.0) + share_g
+        carbon_total = sum(r.carbon_g for r in responses)
         core = self.core
         self._stats = {
             "served": core.served,
@@ -377,7 +414,8 @@ class DESBackend:
             "p99_s": core.percentile(99.0),
             "mean_accuracy": core.acc_weighted / max(core.served, 1),
             "energy_j": total_j,
-            "carbon_g": total_j / 3.6e6 * self.ci_g_per_kwh,
+            "carbon_g": carbon_total,
+            "carbon_g_per_req": carbon_total / max(core.served, 1),
             "wall_s": self.now,
             "deadline_misses": sum(not r.deadline_met for r in responses),
             "preemptions": 0,

@@ -1,8 +1,9 @@
 """Unified request/response serving API: the ServingBackend protocol across
 all backends, pluggable scheduling policies (FIFO ≡ legacy, priority, EDF,
-carbon-aware deferral), the serve(prompts=...) deprecation shim, paged
-decode-time preemption with bit-exact restore, per-request energy/carbon
-attribution, and the gated re-admission bugfix."""
+carbon-aware deferral, forecast-driven valley scheduling), the removal of the
+serve(prompts=...) shim, paged decode-time preemption with bit-exact (and
+partial, tree-backed) restore, per-request energy/carbon attribution, and the
+gated re-admission bugfix."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -83,14 +84,28 @@ def test_carbon_policy_interactive_flows_deferrable_holds():
 
 
 # =============================================================================
-# deprecation shim + FIFO ≡ legacy regression
+# shim removal + FIFO ≡ legacy regression
 # =============================================================================
-def test_serve_shim_warns_and_matches_submit_path(family):
+def test_serve_shim_removed(family):
+    """The ``serve(prompts=...)`` deprecation shim was a one-PR bridge and
+    is gone; the typed submit/drain path is the only public surface (the
+    internal bulk-prompt helper stays, warning-free)."""
+    assert not hasattr(ENG.RealEngine, "serve")
+    import warnings
+
+    eng = ENG.RealEngine(family, n_slots=2, max_len=48)
+    eng.configure(_graph())
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        m = eng._serve_prompts(_prompts((4, 10)), n_new=4)
+    assert m["served"] == 2
+
+
+def test_bulk_prompts_helper_matches_submit_path(family):
     prompts = _prompts()
     legacy = ENG.RealEngine(family, n_slots=2, max_len=48)
     legacy.configure(_graph())
-    with pytest.warns(DeprecationWarning):
-        m_legacy = legacy.serve(prompts, n_new=6)
+    m_legacy = legacy._serve_prompts(prompts, n_new=6)
 
     eng = ENG.RealEngine(family, n_slots=2, max_len=48, policy="fifo")
     eng.configure(_graph())

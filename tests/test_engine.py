@@ -188,7 +188,7 @@ def test_continuous_batching_fifo_admission(family):
     eng = ENG.RealEngine(family, n_slots=2, max_len=32)
     eng.configure(CG.ConfigGraph.from_dict(CFG.name, {("x1", 16): 1}))
     prompts = _prompts(5)
-    m = eng.serve(prompts, n_new=4)
+    m = eng._serve_prompts(prompts, n_new=4)
     assert eng.last_admit_order == [0, 1, 2, 3, 4]
     assert m["served"] == 5
     assert m["tokens"] == 20
@@ -208,7 +208,7 @@ def test_slot_isolation_outputs_independent_of_slot_count(family):
     for n_slots in (1, 4):
         eng = ENG.RealEngine(family, n_slots=n_slots, max_len=32)
         eng.configure(CG.ConfigGraph.from_dict(CFG.name, {("x1", 16): 1}))
-        eng.serve(prompts, n_new=4)
+        eng._serve_prompts(prompts, n_new=4)
         outs[n_slots] = dict(eng.last_outputs)
     for rid in range(4):
         np.testing.assert_array_equal(outs[1][rid], outs[4][rid])
@@ -222,11 +222,11 @@ def test_warm_configure_identical_outputs_and_faster(family):
     g2 = CG.ConfigGraph.from_dict(CFG.name, {("x1", 16): 1})
     t_cold = eng.configure(g1)
     prompts = _prompts(6, seed=7)
-    eng.serve(prompts, n_new=4)
+    eng._serve_prompts(prompts, n_new=4)
     cold_out = dict(eng.last_outputs)
     eng.configure(g2)                      # move away ...
     t_warm = eng.configure(g1)             # ... and warm-return
-    eng.serve(prompts, n_new=4)
+    eng._serve_prompts(prompts, n_new=4)
     warm_out = eng.last_outputs
     assert set(cold_out) == set(warm_out)
     for rid, toks in cold_out.items():
@@ -249,7 +249,7 @@ def test_warmup_covers_every_serve_bucket_no_recompiles(family):
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, CFG.vocab_size, size=(1, L)).astype(np.int32)
                for L in (3, 8, 13, 27, 41)]              # one per bucket
-    eng.serve(prompts, n_new=1)
+    eng._serve_prompts(prompts, n_new=1)
     after = {k: fns[k]._cache_size() for k in ("prefill", "decode", "write")}
     assert after == before, f"serve re-jitted: {before} -> {after}"
 

@@ -268,6 +268,51 @@ def test_fleet_region_engine_kv_layout_plumbing():
     assert region.server.engine.kv_layout == "paged"
 
 
+def test_fleet_region_forecast_policy_probe_end_to_end():
+    """FleetConfig.engine_policy='carbon_forecast' builds the region's
+    engine policy over the REGION'S forecaster (ForecastCIFn, not a raw
+    trace lookup), plumbs horizon/threshold through, and probe_window
+    re-anchors the ci_fn epoch to the window's trace time while serving a
+    mixed interactive+deferrable probe batch on real execution."""
+    pytest.importorskip("jax")
+    from repro.core import config_graph as CG
+    from repro.serving import backends as BK
+    from repro.serving.policies import CarbonForecastPolicy
+    cfg = FS.FleetConfig(backend="real", engine_policy="carbon_forecast",
+                         engine_policy_horizon_s=1800.0,
+                         engine_ci_threshold_g=250.0,
+                         probe_deferrable_frac=0.5, probe_deadline_s=1.0)
+    fam = BK.build_real_family(cfg.engine_arch, cfg.engine_layers,
+                               fracs=(1.0,), seed=cfg.seed)
+    trace = CB.make_trace("CISO-March", hours=2)
+    region = FS._Region("r0", trace, fam[0].variant.family, cfg,
+                        engine_family=fam)
+    pol = region.server.engine.policy
+    assert isinstance(pol, CarbonForecastPolicy)
+    assert pol.ci_threshold == 250.0
+    # the probe session's deadline runway maps onto the configured trace
+    # horizon: horizon in session seconds, ci_fn scales session → trace
+    assert pol.horizon_s == cfg.probe_deadline_s
+    assert pol.ci_fn.time_scale == pytest.approx(1800.0
+                                                 / cfg.probe_deadline_s)
+    # a hold can never turn a probe into a miss: force-release fires while
+    # half the deadline budget remains
+    assert pol.deadline_margin_s == pytest.approx(0.5 * cfg.probe_deadline_s)
+    assert pol.ci_fn.forecaster is region.forecaster
+    assert region.server.ci_fn is pol.ci_fn
+    g = CG.ConfigGraph.uniform(fam[0].variant.family, "x1", 16, 1)
+    t_window = 1800.0
+    m = region.server.probe_window(g, t_window)
+    assert m is not None and m["served"] == cfg.probe_requests
+    assert pol.ci_fn.t0 == t_window          # epoch anchored to the window
+    # mixed probe batch: the deferrable half carried deadlines and flowed
+    # through the hold/release path on a real engine
+    slos = [r.slo for r in region.server.engine.last_responses]
+    assert slos.count("deferrable") == cfg.probe_requests // 2
+    assert region.server.real_served == cfg.probe_requests
+    assert region.server.real_carbon_g > 0.0
+
+
 # =============================================================================
 # controller predictive trigger
 # =============================================================================
@@ -458,8 +503,8 @@ def test_fleet_real_engine_backend_short_horizon():
     prompts = [rng.integers(0, vocab, size=(1, cfg.probe_prompt_len)
                             ).astype(np.int32)
                for _ in range(cfg.probe_requests)]
-    eng.serve(prompts, n_new=cfg.probe_new_tokens)          # compile warmup
-    base = min((eng.serve(prompts, n_new=cfg.probe_new_tokens)
+    eng._serve_prompts(prompts, n_new=cfg.probe_new_tokens)          # compile warmup
+    base = min((eng._serve_prompts(prompts, n_new=cfg.probe_new_tokens)
                 for _ in range(3)), key=lambda m: m["p95_s"])
     # serve_clover derives its SLA as 1.5× measured BASE p95; here the p95
     # is taken over ~50 wall-clock probe batches on a shared CPU host, whose

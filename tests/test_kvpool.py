@@ -374,13 +374,13 @@ def test_engine_paged_matches_slotted_token_for_token(family):
 
     slotted = ENG.RealEngine(family, n_slots=2, max_len=48)
     slotted.configure(g)
-    slotted.serve(prompts, n_new=6)
+    slotted._serve_prompts(prompts, n_new=6)
     out_s = dict(slotted.last_outputs)
 
     paged = ENG.RealEngine(family, n_slots=2, max_len=48, kv_layout="paged",
                            block_size=8, max_seqs=6)
     paged.configure(g)
-    m = paged.serve(prompts, n_new=6)
+    m = paged._serve_prompts(prompts, n_new=6)
     out_p = dict(paged.last_outputs)
 
     assert set(out_s) == set(out_p)
@@ -400,7 +400,7 @@ def test_engine_paged_arena_fully_reclaimed(family):
     eng = ENG.RealEngine(family, n_slots=2, max_len=48, kv_layout="paged",
                          block_size=8, max_seqs=4)
     eng.configure(g)
-    eng.serve(_mixed_prompts(CFG.vocab_size, seed=9), n_new=4)
+    eng._serve_prompts(_mixed_prompts(CFG.vocab_size, seed=9), n_new=4)
     inst = eng.instances[0]
     inst.alloc.check()
     assert all(s is None for s in inst.rows)
@@ -423,7 +423,7 @@ def test_engine_paged_admits_beyond_slot_count(family):
     eng = ENG.RealEngine(family, n_slots=2, max_len=48, kv_layout="paged",
                          block_size=8, max_seqs=8)
     eng.configure(g)
-    m = eng.serve(prompts, n_new=4)
+    m = eng._serve_prompts(prompts, n_new=4)
     assert m["served"] == 12
     # 6-token prompt + 4 new = 2 blocks per seq → up to 6 concurrent seqs
     assert m["mean_inflight"] > 2.0
@@ -455,10 +455,10 @@ def test_engine_open_loop_sla_at_sub_saturation(family):
     eng.configure(g)
     n_new = 6
     rng = np.random.default_rng(0)
-    closed = eng.serve([rng.integers(0, CFG.vocab_size, size=8)
+    closed = eng._serve_prompts([rng.integers(0, CFG.vocab_size, size=8)
                         .astype(np.int32) for _ in range(24)], n_new=n_new)
     sat_rps = closed["tokens_per_s"] / n_new
-    solo = eng.serve([rng.integers(0, CFG.vocab_size, size=8)
+    solo = eng._serve_prompts([rng.integers(0, CFG.vocab_size, size=8)
                       .astype(np.int32)], n_new=n_new)
     sla_s = 8.0 * max(solo["p95_s"], 1e-3)
     m = eng.serve_poisson(rate_rps=0.7 * sat_rps, n_requests=40,

@@ -135,7 +135,7 @@ def test_engine_real_generation_quality_ladder():
     g = CG.ConfigGraph.from_dict(base.name, {("x0.25", 8): 1, ("x1", 8): 1})
     eng.configure(g)
     prompts = [np.array([[1, 2, 3, 4]], dtype=np.int32) for _ in range(4)]
-    m = eng.serve(prompts, n_new=4)
+    m = eng._serve_prompts(prompts, n_new=4)
     assert m["served"] == 4 and m["p95_s"] > 0 and m["energy_j"] > 0
     # depth ladder: measure each variant directly.  The one-pass engine is
     # fast enough that fixed dispatch overhead hides depth on tiny decodes,
