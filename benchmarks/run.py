@@ -39,6 +39,7 @@ def _benchmarks(fast: bool):
         ("table_lm_serving", F.table_lm_serving),
         ("roofline_baseline", _roofline_bench),
         ("carbon_policy_serving", _carbon_policy_bench),
+        ("observability_telemetry", _observability_bench),
     ]
     return items
 
@@ -215,6 +216,174 @@ def _carbon_policy_bench():
             m_swap["partial_swapin_pages_saved"]),
         "swapin_pages_copied": int(m_swap["swapin_pages_copied"]),
         "swapin_token_parity": parity,
+    }
+    return derived, rows
+
+
+def _observability_bench():
+    """Unified-telemetry acceptance numbers (PR-6 observability layer).
+
+    Stage 1 (shared workload, three backends): one camel-shaped request
+    stream runs through the DES backend, the fluid backend, and the real
+    paged engine, each with the full telemetry bundle.  All three must
+    expose the *identical* metric-name set (the shared CATALOG), and each
+    trace must pass the conservation validator — every span closed,
+    span-attributed joules equal to the backend's session energy total.
+    The engine trace is exported to ``benchmarks/out/trace_engine.json``
+    (Perfetto-loadable) and schema-checked.
+
+    Stage 2 (overhead gate): the same compiled paged engine serves the same
+    prompts with telemetry detached vs attached (best of ``reps`` runs
+    each); tracing + metrics may cost at most ``OVERHEAD_GATE_PCT`` of
+    tokens/s, else this benchmark FAILS.
+
+    Stage 3 (layout regression gate): slotted vs paged at equal batch
+    (n_slots == max_seqs == 4, identical prompts/compiled family).  Paged
+    tokens/s below ``PAGED_GATE_FRAC`` × slotted fails the run — the gate
+    that catches a paged-attention throughput regression riding in on an
+    unrelated change.  Both gate values land in BENCH_engine.json via
+    ``--json``.
+    """
+    import numpy as np
+
+    from repro.core import catalog as CAT
+    from repro.core import config_graph as CG
+    from repro.fleet.workload import shaped_request_stream
+    from repro.obs import CATALOG, CarbonFeed, Telemetry, TraceRecorder, \
+        validate_chrome_events, validate_trace
+    from repro.serving import queue as Q
+    from repro.serving.api import serve_workload
+    from repro.serving.backends import FluidBackend
+
+    OVERHEAD_GATE_PCT = 5.0
+    # measured equal-batch ratios on the CPU smoke config: 0.70-0.98 across
+    # runs (small-kernel timing noise dominates); the gate sits below the
+    # noise floor so only a real paged-attention regression trips it
+    PAGED_GATE_FRAC = 0.55
+
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.serving import engine as ENG
+    base = get_smoke_config("qwen3-1.7b").with_(n_layers=2,
+                                                dtype=jnp.float32)
+    ci = 220.0
+
+    def workload():
+        return shaped_request_stream(16, 1.0, vocab_size=base.vocab_size,
+                                     shape="camel", prompt_lens=(6, 10),
+                                     n_new=8, seed=11)
+
+    def bundle(backend):
+        return Telemetry(tracer=TraceRecorder(backend),
+                         feed=CarbonFeed(lambda t: ci, interval_s=30.0,
+                                         region=backend),
+                         backend=backend)
+
+    # --- stage 1: shared workload, three backends, one metric namespace ----
+    variants = CAT.get_family("efficientnet")
+    des_g = CG.ConfigGraph.from_dict("efficientnet", {("B3", 1): 1})
+    tel_des = bundle("des")
+    des = Q.DESBackend(des_g, variants, Q.DESConfig(jitter_sigma=0.0),
+                       ci_g_per_kwh=ci, telemetry=tel_des)
+    serve_workload(des, workload())
+    m_des = des.stats()
+    validate_trace(tel_des.tracer, expect_energy_j=m_des["energy_j"],
+                   expect_requests=int(m_des["served"]))
+
+    tel_fluid = bundle("fluid")
+    fluid = FluidBackend(des_g, variants, sla_target_s=2.0, window_s=0.25,
+                         ci_g_per_kwh=ci, telemetry=tel_fluid)
+    serve_workload(fluid, workload())
+    m_fluid = fluid.stats()
+    validate_trace(tel_fluid.tracer, expect_energy_j=m_fluid["energy_j"],
+                   expect_requests=int(m_fluid["served"]))
+
+    family = ENG.build_engine_family(base, fracs=(1.0,))
+    g = CG.ConfigGraph.from_dict(base.name, {("x1", 16): 1})
+    tel_real = bundle("real-paged")
+    eng = ENG.RealEngine(family, n_slots=4, max_len=48, kv_layout="paged",
+                         block_size=8, max_seqs=4, n_blocks=28,
+                         ci_g_per_kwh=ci, telemetry=tel_real)
+    eng.configure(g)
+    serve_workload(eng, workload())
+    m_eng = eng.stats()
+    validate_trace(tel_real.tracer, expect_energy_j=m_eng["energy_j"],
+                   expect_requests=int(m_eng["served"]))
+    trace_path = os.path.join(OUT_DIR, "trace_engine.json")
+    tel_real.tracer.to_chrome_trace(trace_path)
+    with open(trace_path) as f:
+        n_events = validate_chrome_events(json.load(f)["traceEvents"])
+
+    name_sets = [des.registry.names(), fluid.registry.names(),
+                 eng.last_registry.names()]
+    if not all(s == set(CATALOG) for s in name_sets):
+        raise RuntimeError(f"metric namespaces diverged: "
+                           f"{[sorted(s ^ set(CATALOG)) for s in name_sets]}")
+    tol = 1e-6 * m_eng["energy_j"]
+    if abs(tel_real.feed.energy_j_total + tel_real.feed.pending_energy_j
+           - m_eng["energy_j"]) > tol:
+        raise RuntimeError("carbon feed diverged from engine energy total")
+
+    # --- stage 2: telemetry overhead on the warm engine --------------------
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, base.vocab_size, size=6).astype(np.int32)
+               for _ in range(24)]
+
+    def best_tps(e, reps=3):
+        best = 0.0
+        for _ in range(reps):
+            best = max(best, e._serve_prompts(prompts, n_new=32)
+                       ["tokens_per_s"])
+        return best
+
+    eng._serve_prompts(prompts, n_new=32)          # warm all shapes
+    eng.telemetry = None
+    tps_paged = best_tps(eng)                      # doubles as the gate run
+    eng.telemetry = tel_real
+    tps_on = best_tps(eng)
+    overhead_pct = (1.0 - tps_on / tps_paged) * 100.0
+    if overhead_pct > OVERHEAD_GATE_PCT:
+        raise RuntimeError(f"telemetry overhead {overhead_pct:.1f}% exceeds "
+                           f"{OVERHEAD_GATE_PCT}% gate "
+                           f"({tps_on:.0f} vs {tps_paged:.0f} tokens/s)")
+
+    # --- stage 3: equal-batch paged vs slotted regression gate -------------
+    slot = ENG.RealEngine(family, n_slots=4, max_len=48, ci_g_per_kwh=ci)
+    slot.configure(g)
+    slot._serve_prompts(prompts, n_new=32)         # warm
+    tps_slot = best_tps(slot)
+    ratio = tps_paged / max(tps_slot, 1e-9)
+    if ratio < PAGED_GATE_FRAC:
+        raise RuntimeError(
+            f"paged layout regressed: {tps_paged:.0f} tokens/s is "
+            f"{ratio:.3f}× slotted ({tps_slot:.0f}) at equal batch — "
+            f"gate {PAGED_GATE_FRAC}")
+
+    rows = [("stage", "metric", "value"),
+            ("shared", "backends_conserving", 3),
+            ("shared", "metric_names", len(CATALOG)),
+            ("shared", "chrome_events", n_events),
+            ("shared", "des_energy_j", round(m_des["energy_j"], 3)),
+            ("shared", "fluid_energy_j", round(m_fluid["energy_j"], 3)),
+            ("shared", "engine_energy_j", round(m_eng["energy_j"], 3)),
+            ("overhead", "tokens_per_s_telemetry_off", round(tps_paged, 1)),
+            ("overhead", "tokens_per_s_telemetry_on", round(tps_on, 1)),
+            ("overhead", "overhead_pct", round(overhead_pct, 2)),
+            ("layout_gate", "paged_tokens_per_s", round(tps_paged, 1)),
+            ("layout_gate", "slotted_tokens_per_s", round(tps_slot, 1)),
+            ("layout_gate", "paged_vs_slotted_ratio", round(ratio, 3)),
+            ("layout_gate", "gate_frac", PAGED_GATE_FRAC)]
+    derived = {
+        "metric_names_match": 1,
+        "conservation_backends": 3,
+        "chrome_events": int(n_events),
+        "telemetry_overhead_pct": round(overhead_pct, 2),
+        "overhead_gate_pct": OVERHEAD_GATE_PCT,
+        "paged_tokens_per_s": round(tps_paged, 1),
+        "slotted_tokens_per_s": round(tps_slot, 1),
+        "paged_vs_slotted_ratio": round(ratio, 3),
+        "paged_gate_frac": PAGED_GATE_FRAC,
     }
     return derived, rows
 

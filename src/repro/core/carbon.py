@@ -186,6 +186,10 @@ class CarbonAccountant:
     pue: float = PUE_DEFAULT
     energy_j: float = 0.0
     carbon_g: float = 0.0
+    # optional streaming telemetry (repro.obs.carbon_feed.CarbonFeed): every
+    # add() forwards its EXACT joules/grams, so feed totals equal the
+    # accountant's with no re-derivation (conservation by construction)
+    feed: Optional[object] = None
 
     def add(self, t_start: float, duration_s: float, power_w: float) -> float:
         """Account ``power_w`` drawn for ``duration_s`` starting at t_start.
@@ -195,6 +199,8 @@ class CarbonAccountant:
         g = (e_j / 3.6e6) * ci * self.pue                # J → kWh → gCO2
         self.energy_j += e_j
         self.carbon_g += g
+        if self.feed is not None:
+            self.feed.record_segment(t_start, duration_s, e_j, g)
         return g
 
     def grams_for(self, energy_j: float, ci: float) -> float:

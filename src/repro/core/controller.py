@@ -57,6 +57,11 @@ class Controller:
     # engine's warm ``configure`` attaches here, so a fleet loop drives live
     # instances through the exact same path the simulator exercises.
     on_config_change: Optional[Callable[[CG.ConfigGraph], None]] = None
+    # optional streaming telemetry (repro.obs.carbon_feed.CarbonFeed): when
+    # attached, ``maybe_reoptimize(t)`` may omit ``ci`` and act on the
+    # feed's latest measured snapshot instead of a trace lookup — the
+    # "controller consumes the telemetry plane" coupling (codecarbon idiom)
+    feed: Optional[object] = None
 
     def _notify(self, prev: Optional[CG.ConfigGraph]) -> None:
         if self.on_config_change is not None and self.config is not None \
@@ -99,9 +104,21 @@ class Controller:
         ci_hat = self._forecast_ci(t)
         return ci_hat is not None and self._drifted(self.last_opt_hat, ci_hat)
 
-    def maybe_reoptimize(self, t: float, ci: float
+    def maybe_reoptimize(self, t: float, ci: Optional[float] = None
                          ) -> Tuple[CG.ConfigGraph, Optional[SA.SAOutcome]]:
-        """Returns (active config, SA outcome if an invocation ran)."""
+        """Returns (active config, SA outcome if an invocation ran).
+
+        ``ci`` may be omitted when a :class:`~repro.obs.carbon_feed.
+        CarbonFeed` is attached: the controller then acts on the feed's
+        latest *measured* snapshot (its window-end carbon intensity).  An
+        explicit ``ci`` always wins, so existing callers are unchanged."""
+        if ci is None:
+            assert self.feed is not None, \
+                "maybe_reoptimize needs an explicit ci or an attached feed"
+            snap = self.feed.latest()
+            assert snap is not None, \
+                "carbon feed has no snapshot yet (heartbeat it first)"
+            ci = snap.ci_g_per_kwh
         if not self.should_reoptimize(ci, t):
             return self.config, None
         predictive = not self._drifted(self.last_opt_ci, ci)  # forecast fired

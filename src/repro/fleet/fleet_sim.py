@@ -44,6 +44,7 @@ from repro.fleet import forecast as FC
 from repro.fleet import router as RT
 from repro.fleet import shifting as SH
 from repro.fleet import workload as WL
+from repro.obs import CarbonFeed
 from repro.serving import simulator as SIM
 
 
@@ -173,6 +174,11 @@ class RegionReport:
     real_preemptions: int = 0          # paged decode-time swap-outs
     real_reconfig_s: float = 0.0       # total warm-reconfiguration seconds
     real_reconfigs: int = 0
+    # streaming telemetry (repro.obs.carbon_feed): totals equal the
+    # accountant's by construction; snapshots = emitted feed windows
+    feed_energy_j: float = 0.0
+    feed_carbon_g: float = 0.0
+    feed_snapshots: int = 0
 
 
 @dataclasses.dataclass
@@ -232,6 +238,14 @@ class _Region:
             forecaster=self.forecaster if cfg.predictive_on else None,
             forecast_horizon_s=cfg.forecast_horizon_s)
         self.acct = CB.CarbonAccountant(trace)
+        # streaming per-region telemetry: every accountant segment forwards
+        # its exact joules/grams into this feed (one snapshot per fleet
+        # window's worth of accumulation), and the controller can consume
+        # the feed's measured CI in place of a raw trace lookup
+        self.feed = CarbonFeed(trace.at, interval_s=cfg.window_s,
+                               region=name, pue=self.acct.pue)
+        self.acct.feed = self.feed
+        self.controller.feed = self.feed
         if engine_family is not None:
             # lazy imports: the fluid path must not depend on jax
             from repro.serving import backends as BK
@@ -764,6 +778,9 @@ def run_fleet(family: str, traces: Dict[str, CB.CarbonTrace],
     all_lat: List[Tuple[float, float]] = []
     for r in regions:
         all_lat.extend(r.server.lat_samples)
+        # close the streaming telemetry window: whatever the feed still
+        # holds becomes its final snapshot, carrying the region's SLA health
+        r.feed.flush(t, sla_ok_frac=1.0 - r.server.sla_violation_frac)
         region_reports[r.name] = RegionReport(
             name=r.name, carbon_g=r.acct.carbon_g, energy_j=r.acct.energy_j,
             served_interactive=r.server.served_total,
@@ -782,7 +799,10 @@ def run_fleet(family: str, traces: Dict[str, CB.CarbonTrace],
             real_carbon_g=getattr(r.server, "real_carbon_g", 0.0),
             real_preemptions=getattr(r.server, "real_preemptions", 0),
             real_reconfig_s=getattr(r.server, "reconfig_s_total", 0.0),
-            real_reconfigs=getattr(r.server, "n_reconfigs", 0))
+            real_reconfigs=getattr(r.server, "n_reconfigs", 0),
+            feed_energy_j=r.feed.energy_j_total,
+            feed_carbon_g=r.feed.carbon_g_total,
+            feed_snapshots=len(r.feed.snapshots))
     return FleetReport(
         regions=region_reports,
         carbon_g=sum(r.acct.carbon_g for r in regions),

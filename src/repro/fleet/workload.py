@@ -130,3 +130,75 @@ def request_stream(workload: FleetWorkload, duration_s: float, *,
             rid += 1
     reqs.sort(key=lambda r: (r.arrival_s, r.rid))
     return reqs
+
+
+# =============================================================================
+# shaped load generators (CarbonShiftML-style diurnal shapes)
+# =============================================================================
+# Arrival densities over a normalized horizon x ∈ [0, 1].  A uniform draw is
+# the "random" shape; "linear" ramps 0 → peak (a growing service); "peak" is
+# one mid-horizon gaussian bump (a business-hours service); "camel" is two
+# bumps at 0.25/0.75 (morning + evening commute).  All are sampled by
+# inverse-CDF over a dense grid, so any n produces exactly-shaped arrivals
+# and two seeds never collide in shape — only in jitter.
+WORKLOAD_SHAPES = ("random", "linear", "peak", "camel")
+
+_SHAPE_GRID = 512
+
+
+def _shape_density(shape: str, x: np.ndarray) -> np.ndarray:
+    if shape == "random":
+        return np.ones_like(x)
+    if shape == "linear":
+        return 0.1 + 0.9 * x               # never fully silent at the start
+    if shape == "peak":
+        return 0.1 + np.exp(-0.5 * ((x - 0.5) / 0.12) ** 2)
+    if shape == "camel":
+        return (0.1 + np.exp(-0.5 * ((x - 0.25) / 0.08) ** 2)
+                + np.exp(-0.5 * ((x - 0.75) / 0.08) ** 2))
+    raise ValueError(f"unknown workload shape {shape!r} "
+                     f"(have {WORKLOAD_SHAPES})")
+
+
+def shaped_arrival_times(n: int, duration_s: float, shape: str = "random",
+                         seed: int = 0) -> np.ndarray:
+    """``n`` sorted arrival timestamps in [0, duration_s] following the
+    named load shape (inverse-CDF sampling of the shape's density)."""
+    assert n >= 0 and duration_s > 0.0
+    if n == 0:
+        return np.zeros((0,), np.float64)
+    rng = np.random.default_rng(seed)
+    x = np.linspace(0.0, 1.0, _SHAPE_GRID)
+    dens = _shape_density(shape, x)
+    cdf = np.cumsum(dens)
+    cdf = (cdf - cdf[0]) / (cdf[-1] - cdf[0])
+    u = np.sort(rng.uniform(0.0, 1.0, size=n))
+    return np.interp(u, cdf, x) * duration_s
+
+
+def shaped_request_stream(n: int, duration_s: float, *, vocab_size: int,
+                          shape: str = "random",
+                          prompt_lens: Sequence[int] = (6,), n_new: int = 8,
+                          slo: str = INTERACTIVE, priority: int = 1,
+                          deadline_slack_s: Optional[float] = None,
+                          seed: int = 0) -> List[InferenceRequest]:
+    """``n`` typed requests whose arrivals follow the named load shape —
+    the per-request analogue of :func:`make_workload`'s fluid rates, for
+    driving any ``ServingBackend`` under realistic diurnal load instead of
+    flat Poisson.  ``deadline_slack_s`` (if given) stamps each request with
+    ``arrival + slack`` as its deadline, which is what EDF and the carbon
+    policies key on."""
+    arrivals = shaped_arrival_times(n, duration_s, shape, seed)
+    rng = np.random.default_rng(seed + 1)
+    reqs: List[InferenceRequest] = []
+    for rid, a in enumerate(arrivals):
+        reqs.append(InferenceRequest(
+            rid=rid, prompt=rng.integers(
+                0, vocab_size,
+                size=int(prompt_lens[rid % len(prompt_lens)])
+            ).astype(np.int32),
+            max_new_tokens=n_new, slo=slo, priority=priority,
+            arrival_s=float(a),
+            deadline_s=(float(a) + deadline_slack_s
+                        if deadline_slack_s is not None else None)))
+    return reqs

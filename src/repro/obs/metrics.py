@@ -1,0 +1,216 @@
+"""Metrics registry: counters, gauges, histograms under shared names.
+
+Replaces the scattered per-backend ``stats`` dicts as the source of truth:
+every serving layer emits into a :class:`MetricsRegistry` and its protocol
+``stats()`` becomes a *view* over the registry.  The cross-backend metric
+names live in :data:`CATALOG`; :meth:`MetricsRegistry.standard`
+pre-registers the whole catalog so the metric-name *set* is identical
+across backends by construction — a backend that never preempts still
+reports ``preemptions == 0`` instead of omitting the name, which is what
+lets one dashboard / one test read real, DES and fluid runs side by side.
+
+Histogram percentiles are exact nearest-rank over the raw observations
+(rank = ceil(q/100·n) clamped to [1, n]) — the same rounding as
+``serving.scheduler.latency_percentile``, kept in sync by a test, so a
+registry histogram reproduces the engine's legacy percentile numbers
+bit-for-bit.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterable, List, Optional, Set
+
+__all__ = ["CATALOG", "CORE_METRICS", "Counter", "Gauge", "Histogram",
+           "MetricsRegistry", "nearest_rank_percentile"]
+
+
+def nearest_rank_percentile(values: List[float], q: float) -> float:
+    """Exact nearest-rank percentile (ceil(q/100·n), clamped to [1, n])."""
+    if not values:
+        return 0.0
+    s = sorted(values)
+    rank = math.ceil(q / 100.0 * len(s))
+    return s[min(max(rank, 1), len(s)) - 1]
+
+
+class Counter:
+    """Monotonically increasing count (requests, joules, tokens, ...)."""
+
+    __slots__ = ("name", "value")
+    kind = "counter"
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        assert amount >= 0, f"counter {self.name} decremented by {amount}"
+        self.value += amount
+
+
+class Gauge:
+    """Last-written value plus its observed peak (occupancy, backlog, ...)."""
+
+    __slots__ = ("name", "value", "peak")
+    kind = "gauge"
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+        self.peak = 0.0
+
+    def set(self, value: float) -> None:
+        self.value = float(value)
+        self.peak = max(self.peak, self.value)
+
+
+class Histogram:
+    """Raw-sample histogram with exact nearest-rank percentiles.
+
+    Keeps every observation (serving sessions are bounded — tens to tens of
+    thousands of samples); ``percentile`` is exact, not a bucket
+    approximation, because the SLA numbers the paper reports are tail
+    quantiles and bucketing error lands exactly there."""
+
+    __slots__ = ("name", "samples")
+    kind = "histogram"
+
+    def __init__(self, name: str):
+        self.name = name
+        self.samples: List[float] = []
+
+    def observe(self, value: float) -> None:
+        self.samples.append(float(value))
+
+    @property
+    def count(self) -> int:
+        return len(self.samples)
+
+    @property
+    def sum(self) -> float:
+        return float(sum(self.samples))
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.samples else 0.0
+
+    def percentile(self, q: float) -> float:
+        return nearest_rank_percentile(self.samples, q)
+
+
+# =============================================================================
+# shared metric-name catalog
+# =============================================================================
+# The cross-backend contract: every serving backend (real slotted, real
+# paged, DES, fluid) and the fleet's per-region telemetry report under
+# exactly these names.  Extending the serving layer means extending this
+# table — tests assert the emitted name set equals the catalog.
+CATALOG: Dict[str, str] = {
+    # request flow
+    "requests_submitted": "counter",
+    "requests_served": "counter",
+    "tokens_generated": "counter",
+    "deadline_misses": "counter",
+    "preemptions": "counter",
+    "holds_released": "counter",    # requests a policy held then released
+    # energy / carbon attribution
+    "energy_j": "counter",
+    "carbon_g": "counter",
+    # latency distributions (seconds)
+    "latency_s": "histogram",
+    "queue_delay_s": "histogram",
+    "ttft_s": "histogram",
+    "held_s": "histogram",          # policy-hold portion of the queue delay
+    "accuracy": "histogram",        # per-request serving-variant accuracy
+    # engine internals (zero on analytic backends — the names still exist)
+    "decode_steps": "counter",
+    "prefill_chunks": "counter",
+    "prefix_hit_tokens": "counter",
+    "swapin_pages_copied": "counter",
+    "swapin_pages_saved": "counter",
+    "compile_retraces": "counter",  # post-warmup jit shape misses
+    "blocks_in_use": "gauge",       # .peak = blocks_peak
+    "occupied_rows": "gauge",
+    # session
+    "wall_s": "gauge",
+}
+
+# the subset every backend genuinely measures (used by parity tests to
+# assert the values — not just the names — were filled in)
+CORE_METRICS = ("requests_submitted", "requests_served", "energy_j",
+                "carbon_g", "latency_s", "queue_delay_s", "wall_s")
+
+
+class MetricsRegistry:
+    """Named metrics under one roof; get-or-create with kind checking."""
+
+    def __init__(self, backend: str = "backend"):
+        self.backend = backend
+        self._metrics: Dict[str, object] = {}
+
+    @classmethod
+    def standard(cls, backend: str = "backend") -> "MetricsRegistry":
+        """A registry with the whole :data:`CATALOG` pre-registered — the
+        constructor every serving backend uses, so metric-name sets are
+        identical across backends by construction."""
+        reg = cls(backend)
+        for name, kind in CATALOG.items():
+            reg._register(name, kind)
+        return reg
+
+    # --- get-or-create -------------------------------------------------------
+    def _register(self, name: str, kind: str):
+        m = self._metrics.get(name)
+        if m is not None:
+            assert m.kind == kind, \
+                f"metric {name!r} is a {m.kind}, requested as {kind}"
+            return m
+        ctor = {"counter": Counter, "gauge": Gauge,
+                "histogram": Histogram}[kind]
+        m = ctor(name)
+        self._metrics[name] = m
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._register(name, "counter")
+
+    def gauge(self, name: str) -> Gauge:
+        return self._register(name, "gauge")
+
+    def histogram(self, name: str) -> Histogram:
+        return self._register(name, "histogram")
+
+    # --- introspection -------------------------------------------------------
+    def names(self) -> Set[str]:
+        return set(self._metrics)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._metrics
+
+    def get(self, name: str):
+        return self._metrics.get(name)
+
+    def value(self, name: str) -> float:
+        """Scalar value of a counter/gauge (histograms: use the object)."""
+        m = self._metrics[name]
+        assert m.kind != "histogram", f"{name} is a histogram"
+        return m.value
+
+    def snapshot(self, percentiles: Iterable[float] = (50.0, 95.0, 99.0)
+                 ) -> Dict[str, float]:
+        """Flat scalar view: counters/gauges by name (gauges also emit
+        ``<name>_peak``), histograms expanded to ``<name>_pNN`` +
+        ``<name>_count`` / ``<name>_mean``."""
+        out: Dict[str, float] = {}
+        for name, m in sorted(self._metrics.items()):
+            if m.kind == "histogram":
+                out[f"{name}_count"] = float(m.count)
+                out[f"{name}_mean"] = m.mean
+                for q in percentiles:
+                    out[f"{name}_p{q:g}"] = m.percentile(q)
+            elif m.kind == "gauge":
+                out[name] = m.value
+                out[f"{name}_peak"] = m.peak
+            else:
+                out[name] = m.value
+        return out

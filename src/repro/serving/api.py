@@ -108,6 +108,8 @@ class InferenceResponse:
     preemptions: int = 0
     accuracy: float = 0.0              # serving variant's accuracy proxy
     deadline_s: Optional[float] = None
+    held_s: float = 0.0                # policy-hold portion of queue_delay_s
+    release_reason: Optional[str] = None   # "valley"/"threshold"/"runway"
 
     @property
     def n_tokens(self) -> int:

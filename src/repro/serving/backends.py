@@ -36,6 +36,7 @@ import numpy as np
 from repro.core import carbon as CB
 from repro.core import config_graph as CG
 from repro.core.catalog import Variant
+from repro.obs import MetricsRegistry, Telemetry
 from repro.serving import simulator as SIM
 from repro.serving.api import DEFERRABLE, DONE, INTERACTIVE, \
     InferenceRequest, InferenceResponse, serve_workload
@@ -160,7 +161,8 @@ class FluidBackend:
 
     def __init__(self, g: CG.ConfigGraph, variants: Sequence[Variant],
                  sla_target_s: float, trace: Optional[CB.CarbonTrace] = None,
-                 window_s: float = 60.0, ci_g_per_kwh: float = 0.0):
+                 window_s: float = 60.0, ci_g_per_kwh: float = 0.0,
+                 telemetry: Optional[Telemetry] = None):
         self.g = g
         self.window_s = window_s
         if trace is None:
@@ -168,6 +170,12 @@ class FluidBackend:
                                    np.array([ci_g_per_kwh, ci_g_per_kwh]))
         self.acct = CB.CarbonAccountant(trace)
         self.server = SIM.FluidServer(variants, self.acct, sla_target_s)
+        # single-session backend: one registry for its whole life
+        self.telemetry = telemetry
+        self.registry = MetricsRegistry.standard("fluid")
+        if telemetry is not None:
+            telemetry.registry = self.registry
+        self.tracer = telemetry.tracer if telemetry is not None else None
         self.now = 0.0
         self._pending: Dict[str, List[InferenceRequest]] = {
             INTERACTIVE: [], DEFERRABLE: []}
@@ -180,6 +188,7 @@ class FluidBackend:
     # --- protocol ------------------------------------------------------------
     def submit(self, req: InferenceRequest) -> None:
         self._all.append(req)
+        self.registry.counter("requests_submitted").inc()
 
     def step(self) -> List[InferenceResponse]:
         """Serve one fluid window: release arrivals due by its end, serve
@@ -208,14 +217,34 @@ class FluidBackend:
             q = self._pending[slo]
             for req in q[:served]:
                 lat = seg.p95_s
-                out.append(InferenceResponse(
+                resp = InferenceResponse(
                     rid=req.rid, tokens=None, slo=req.slo,
                     priority=req.priority, state=DONE,
                     t_arrival=req.arrival_s or 0.0, t_finish=t1,
                     queue_delay_s=max(lat, 0.0), ttft_s=lat, latency_s=lat,
                     energy_j=share_j, carbon_g=share_j / 3.6e6 * ci,
-                    accuracy=seg.res.accuracy, deadline_s=req.deadline_s))
+                    accuracy=seg.res.accuracy, deadline_s=req.deadline_s)
+                out.append(resp)
+                reg = self.registry
+                reg.counter("requests_served").inc()
+                reg.histogram("latency_s").observe(resp.latency_s)
+                reg.histogram("queue_delay_s").observe(resp.queue_delay_s)
+                reg.histogram("ttft_s").observe(resp.ttft_s)
+                reg.histogram("accuracy").observe(resp.accuracy)
+                if not resp.deadline_met:
+                    reg.counter("deadline_misses").inc()
+                if self.tracer is not None:
+                    # fluid latencies are window aggregates, not a real
+                    # timeline — span the completion window and carry the
+                    # final attribution directly (no post-hoc annotate)
+                    self.tracer.span("request", resp.t_arrival, t1,
+                                     rid=resp.rid, slo=resp.slo, n_tokens=0,
+                                     energy_j=resp.energy_j,
+                                     carbon_g=resp.carbon_g)
             del q[:served]
+        if self.tracer is not None and n_done:
+            self.tracer.span("window", t0, t1, served=n_done,
+                             power_w=seg.res.power_w, ci=ci)
         self._responses.extend(out)
         return out
 
@@ -225,16 +254,25 @@ class FluidBackend:
                          or len(self._released) < len(self._all)):
             self.step()                    # converges — backlog is served
             limit -= 1                     # at capacity every window
+        reg = self.registry
+        total_j = sum(r.energy_j for r in self._responses)
+        total_g = sum(r.carbon_g for r in self._responses)
+        reg.counter("energy_j").inc(total_j)
+        reg.counter("carbon_g").inc(total_g)
+        reg.gauge("wall_s").set(self.now)
+        if self.telemetry is not None and self.telemetry.feed is not None:
+            self.telemetry.feed.record_segment(0.0, self.now, total_j,
+                                               total_g)
         self._stats = {
-            "served": len(self._responses),
+            "served": int(reg.value("requests_served")),
             "p95_s": self.server.weighted_p95(),
             "mean_accuracy": self.server.mean_accuracy,
             # attributed totals: sums of the per-response shares, so the
             # joules-sum / carbon = J × CI contract holds for this backend
             # too.  The accountant's trace total (which also counts windows
             # that completed nothing) is reported separately.
-            "energy_j": sum(r.energy_j for r in self._responses),
-            "carbon_g": sum(r.carbon_g for r in self._responses),
+            "energy_j": reg.value("energy_j"),
+            "carbon_g": reg.value("carbon_g"),
             "trace_carbon_g": self.acct.carbon_g,
             "wall_s": self.now,
             "sla_violation_frac": self.server.sla_violation_frac,

@@ -83,6 +83,7 @@ from repro.core import perf_model as PM
 from repro.core.catalog import Variant
 from repro.models import registry as R
 from repro.models.config import ModelConfig
+from repro.obs import MetricsRegistry, Telemetry, TraceRecorder
 from repro.serving.api import DONE, InferenceRequest, InferenceResponse, \
     serve_prompts
 from repro.serving.kvpool import BlockAllocator, RadixPrefixCache
@@ -278,6 +279,17 @@ def _tick_info(prefill_s: float = 0.0, decode_s: float = 0.0,
             "preempted": preempted or []}         # [_SwapState, ...]
 
 
+def _note_shape(inst, key: Tuple) -> None:
+    """Compile-retrace accounting: every jitted entry the serve loop hits
+    registers its shape key here; a key not pre-seeded by ``warmup``
+    (``inst._shapes``) is a post-warmup jit trace — the exact event the
+    bucket ladders exist to prevent — and increments the instance's
+    lifetime ``retraces`` counter (sessions report the delta)."""
+    if key not in inst._shapes:
+        inst._shapes.add(key)
+        inst.retraces += 1
+
+
 class Instance:
     """One serving instance: a slotted batched KV cache plus the variant's
     shared jitted one-pass prefill and batched decode step."""
@@ -293,6 +305,8 @@ class Instance:
                                        dtype=jnp.float32)
         self.slots: List[Optional[_SlotState]] = [None] * n_slots
         self._next = np.zeros((n_slots, 1), np.int32)   # next decode token
+        self._shapes: set = set()        # jit shape keys seen (see _note_shape)
+        self.retraces = 0                # lifetime post-warmup shape misses
 
     # --- lifecycle -----------------------------------------------------------
     def reset(self) -> None:
@@ -309,6 +323,7 @@ class Instance:
         first real request never re-jits (a probe window's measured
         first-token latency must not include a trace)."""
         for b in serve_buckets(self.max_len):
+            self._shapes.add(("prefill", b))
             dummy = np.zeros((1, b), np.int32)
             lg, k_all, v_all = self._fns["prefill"](self.ev.params,
                                                     jnp.asarray(dummy))
@@ -320,6 +335,7 @@ class Instance:
                 self._fns["write"](self.cache["k"], self.cache["v"],
                                    self.cache["lengths"], k_all[:, :, :w],
                                    v_all[:, :, :w], 0, 0)
+        self._shapes.add(("decode",))
         logits, _ = self._fns["decode"](
             self.ev.params, self.cache, jnp.asarray(self._next),
             jnp.zeros((self.n_slots,), bool))
@@ -379,6 +395,7 @@ class Instance:
         assert true_len + n_new <= self.max_len, \
             f"prompt {true_len} + n_new {n_new} > max_len {self.max_len}"
         pad = _bucket(true_len)
+        _note_shape(self, ("prefill", pad))
         padded = np.zeros((1, pad), np.int32)
         padded[0, :true_len] = prompt
         logits, k_all, v_all = self._fns["prefill"](self.ev.params,
@@ -401,6 +418,7 @@ class Instance:
         requests — their slots are freed for mid-flight admission — and the
         (rid, token) emissions of every active row for streaming)."""
         active = np.array([s is not None for s in self.slots])
+        _note_shape(self, ("decode",))
         logits, self.cache = self._fns["decode"](
             self.ev.params, self.cache, jnp.asarray(self._next),
             jnp.asarray(active))
@@ -565,6 +583,8 @@ class PagedInstance:
         # the gap is what the radix tree's surviving blocks saved
         self.swapin_pages_total = 0
         self.swapin_pages_copied = 0
+        self._shapes: set = set()        # jit shape keys seen (see _note_shape)
+        self.retraces = 0                # lifetime post-warmup shape misses
 
     # --- lifecycle -----------------------------------------------------------
     def reset(self) -> None:
@@ -587,11 +607,13 @@ class PagedInstance:
         junk block, so logical state is untouched."""
         dummy = jnp.zeros((1, self.chunk_tokens), jnp.int32)
         for span in self._page_buckets():
+            self._shapes.add(("prefill_paged", span))
             lg, self.arena = self._fns["prefill_paged"](
                 self.ev.params, dummy, self.arena,
                 jnp.zeros((span,), jnp.int32), 0, 0)
             lg.block_until_ready()
         for B in self._row_buckets():
+            self._shapes.add(("decode_paged", B))
             lg, self.arena = self._fns["decode_paged"](
                 self.ev.params, self.arena, jnp.asarray(self._next[:B]),
                 jnp.asarray(self.tables[:B]), jnp.asarray(self.lengths[:B]),
@@ -865,6 +887,7 @@ class PagedInstance:
         # end at start + true_c, so later pages are causally invisible
         span = _pow2_bucket(-(-(start + true_c) // self.block_size),
                             self.n_pages)
+        _note_shape(self, ("prefill_paged", span))
         logits, self.arena = self._fns["prefill_paged"](
             self.ev.params, jnp.asarray(padded), self.arena,
             jnp.asarray(self.tables[seq.row][:span]), start, true_c)
@@ -950,6 +973,7 @@ class PagedInstance:
             # the smallest power-of-two row bucket covering them, so 5 live
             # sequences cost 8 rows of gather+compute, not max_seqs
             B = _pow2_bucket(self.occupied, self.max_seqs)
+            _note_shape(self, ("decode_paged", B))
             decode_rids = [s.rid for s in self.rows[:B]
                            if s is not None and s.prefilled
                            and s.remaining > 0]
@@ -990,8 +1014,15 @@ class _Session:
     release schedule, per-request energy meters, swapped-out images, the
     admission gate, and the aggregate counters ``stats`` reports."""
 
-    def __init__(self, core: SchedulerCore, instances) -> None:
+    def __init__(self, core: SchedulerCore, instances,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[TraceRecorder] = None) -> None:
         self.core = core
+        self.registry = (registry if registry is not None
+                         else MetricsRegistry.standard("real"))
+        self.tracer = tracer
+        self.span_ids: Dict[int, int] = {}       # rid → "request" span sid
+        self.preempt_sids: Dict[int, int] = {}   # rid → open "preempted" sid
         self.t0 = time.perf_counter()
         self.future: List[Tuple[float, int, int]] = []   # (t_abs, seq, rid)
         self._fseq = 0
@@ -1027,6 +1058,7 @@ class _Session:
                                for i in instances)
         self.swap_copied0 = sum(getattr(i, "swapin_pages_copied", 0)
                                 for i in instances)
+        self.retraces0 = sum(getattr(i, "retraces", 0) for i in instances)
 
     def schedule(self, req: InferenceRequest) -> None:
         if req.arrival_s is None:
@@ -1058,7 +1090,8 @@ class RealEngine:
                  max_seqs: Optional[int] = None, chunk_blocks: int = 2,
                  prefix_caching: bool = True,
                  policy: Union[str, SchedulerPolicy, None] = "fifo",
-                 preemption: bool = False, ci_g_per_kwh: float = 0.0):
+                 preemption: bool = False, ci_g_per_kwh: float = 0.0,
+                 telemetry: Optional[Telemetry] = None):
         assert kv_layout in ("slotted", "paged"), kv_layout
         assert not (preemption and kv_layout == "slotted"), \
             "preemption requires the paged KV layout (slots never grow)"
@@ -1078,6 +1111,13 @@ class RealEngine:
         self.policy = make_policy(policy)
         self.preemption = preemption
         self.ci_g_per_kwh = ci_g_per_kwh
+        # optional unified-telemetry bundle: the engine repoints its
+        # ``registry`` at every session open (per-session registries) and
+        # emits lifecycle spans into its persistent ``tracer``; its ``feed``
+        # receives one exact (wall, joules, grams) segment per session
+        self.telemetry = telemetry
+        self.last_registry: Optional[MetricsRegistry] = None
+        self._feed_clock = 0.0           # feed-time seconds across sessions
         self._pool: Dict[Tuple[str, int], List[Instance]] = {}
         self._session: Optional[_Session] = None
         self._last_stats: Dict[str, float] = {}
@@ -1132,14 +1172,22 @@ class RealEngine:
         relative to it."""
         assert self.instances, "configure() first"
         if self._session is None:
-            self._session = _Session(SchedulerCore(self.policy),
-                                     self.instances)
+            reg = MetricsRegistry.standard(f"real-{self.kv_layout}")
+            tel = self.telemetry
+            if tel is not None:
+                tel.registry = reg       # per-session registry (see obs)
+            self.policy.reset_holds()    # rids repeat across sessions
+            self._session = _Session(
+                SchedulerCore(self.policy), self.instances, registry=reg,
+                tracer=tel.tracer if tel is not None else None)
+            self.last_registry = reg
             self.last_admit_order = []
             self.last_outputs = {}
         s = self._session
         assert req.rid not in s.requests, f"duplicate rid {req.rid}"
         s.requests[req.rid] = req
         s.meters[req.rid] = 0.0
+        s.registry.counter("requests_submitted").inc()
         s.schedule(req)
 
     def step(self) -> List[InferenceResponse]:
@@ -1187,6 +1235,13 @@ class RealEngine:
                 if swap is not None:
                     state, dt = inst.resume(swap)
                     del s.swapped[rid]
+                    if s.tracer is not None:
+                        t_res = s.rel(time.perf_counter())
+                        sid = s.preempt_sids.pop(rid, None)
+                        if sid is not None:
+                            s.tracer.close_span(sid, t_res,
+                                                pages=swap.n_blocks)
+                        s.tracer.instant("swap_in", t_res, rid=rid)
                 else:
                     state, dt = inst.admit_next(rid, t_arr, req.prompt,
                                                 req.max_new_tokens,
@@ -1199,6 +1254,8 @@ class RealEngine:
                     self.last_admit_order.append(rid)
                     if state.tokens and req.on_token is not None:
                         req.on_token(rid, state.tokens[0])   # slotted first
+                    if s.tracer is not None:
+                        s.tracer.instant("admit", s.rel(t1), rid=rid)
                 e_pf = inst.chips * PM.P_BUSY_W * dt   # prefill: busy power
                 s.energy += e_pf
                 s.meters[rid] += e_pf
@@ -1213,7 +1270,8 @@ class RealEngine:
             s.progressed = True
             s.admitted_sum += inst.occupied   # holding cache memory now
             s.tick_samples += 1
-            done, info = inst.tick(s.rel(time.perf_counter()))
+            t_tick = time.perf_counter()
+            done, info = inst.tick(s.rel(t_tick))
             s.energy += inst.chips * PM.P_BUSY_W * info["prefill_s"]
             for rid, dtc in info["prefill_rids"]:
                 s.meters[rid] += inst.chips * PM.P_BUSY_W * dtc
@@ -1230,6 +1288,22 @@ class RealEngine:
                 s.inflight_sum += occ
             s.accounted_s[id(inst)] += info["prefill_s"] + info["decode_s"]
             s.blocks_peak = max(s.blocks_peak, int(info["blocks_in_use"]))
+            s.registry.gauge("occupied_rows").set(info["occupied"])
+            s.registry.gauge("blocks_in_use").set(info["blocks_in_use"])
+            if s.tracer is not None:
+                tr = s.tracer
+                # chunks ran back-to-back from the tick start; the decode
+                # step follows them — lay the spans out on that timeline
+                cursor = s.rel(t_tick)
+                for rid, dtc in info["prefill_rids"]:
+                    tr.span("prefill_chunk", cursor, cursor + dtc, rid=rid)
+                    cursor += dtc
+                if info["decode_steps"]:
+                    tr.span("decode_tick", cursor, cursor + info["decode_s"],
+                            rids=info["decode_rids"], n=info["occupied"])
+                if info["blocks_in_use"]:
+                    tr.counter("blocks_in_use", cursor,
+                               info["blocks_in_use"])
             for rid, tok in info["emitted"]:
                 cb = s.requests[rid].on_token
                 if cb is not None:
@@ -1238,6 +1312,12 @@ class RealEngine:
                 req = s.requests[swap.rid]
                 s.swapped[swap.rid] = swap
                 s.preempt_total += 1
+                if s.tracer is not None:
+                    t_sw = s.rel(time.perf_counter())
+                    s.tracer.instant("swap_out", t_sw, rid=swap.rid,
+                                     pages=swap.n_blocks)
+                    s.preempt_sids[swap.rid] = s.tracer.open_span(
+                        "preempted", t_sw, rid=swap.rid)
                 s.core.requeue_front(swap.rid, swap.t_arrival,
                                      priority=req.priority,
                                      deadline_s=req.deadline_s,
@@ -1254,10 +1334,12 @@ class RealEngine:
         s = self._session
         if s is None:
             return []
+        stalled_once = False
         while s.future or s.core.has_pending() \
                 or any(i.busy for i in self.instances):
             self.step()
             if s.progressed:
+                stalled_once = False
                 continue
             now = time.perf_counter()
             if s.future and not s.core.has_pending():
@@ -1269,6 +1351,12 @@ class RealEngine:
                     # policy hold (carbon-aware deferral): wait for the
                     # clock/CI to move, the queue is intentionally parked
                     time.sleep(0.001)
+                elif not stalled_once:
+                    # a policy hold may have crossed its release boundary
+                    # in the gap between step()'s select and this peek —
+                    # a releasable head is only a STALL if another full
+                    # step still cannot place it
+                    stalled_once = True
                 else:
                     raise RuntimeError(
                         "admission stalled: head request fits no instance")
@@ -1291,6 +1379,7 @@ class RealEngine:
                 if state.t_first is not None else 0.0)
         if state.t_first is not None:
             s.ttfts.append(ttft)
+        hold = self.policy.hold_info(state.rid)
         resp = InferenceResponse(
             rid=state.rid, tokens=np.asarray(state.tokens, np.int64),
             slo=req.slo, priority=req.priority, state=DONE,
@@ -1298,8 +1387,36 @@ class RealEngine:
             queue_delay_s=s.admit_t[state.rid] - state.t_arrival,
             ttft_s=ttft, latency_s=t_fin - state.t_arrival,
             energy_j=s.meters[state.rid], preemptions=state.preempts,
-            accuracy=inst.ev.variant.accuracy, deadline_s=req.deadline_s)
+            accuracy=inst.ev.variant.accuracy, deadline_s=req.deadline_s,
+            held_s=hold[1] - hold[0] if hold is not None else 0.0,
+            release_reason=hold[2] if hold is not None else None)
         s.responses.append(resp)
+        reg = s.registry
+        reg.counter("requests_served").inc()
+        reg.counter("tokens_generated").inc(resp.n_tokens)
+        reg.histogram("latency_s").observe(resp.latency_s)
+        reg.histogram("queue_delay_s").observe(resp.queue_delay_s)
+        if state.t_first is not None:
+            reg.histogram("ttft_s").observe(ttft)
+        reg.histogram("accuracy").observe(resp.accuracy)
+        if not resp.deadline_met:
+            reg.counter("deadline_misses").inc()
+        if hold is not None:
+            reg.counter("holds_released").inc()
+            reg.histogram("held_s").observe(resp.held_s)
+        if s.tracer is not None:
+            # the root lifecycle span, reconstructed now that the request's
+            # bounds are known; _finalize annotates the final joules/grams
+            # (the idle-floor share only exists at drain)
+            sid = s.tracer.span(
+                "request", state.t_arrival - s.t0, t_fin - s.t0,
+                rid=state.rid, slo=req.slo, n_tokens=resp.n_tokens,
+                queue_delay_s=resp.queue_delay_s,
+                preemptions=state.preempts)
+            s.span_ids[state.rid] = sid
+            if hold is not None:
+                s.tracer.span("hold", hold[0], hold[1], rid=state.rid,
+                              reason=hold[2])
         return resp
 
     def _finalize(self, s: _Session) -> None:
@@ -1315,19 +1432,49 @@ class RealEngine:
         for r in s.responses:
             r.energy_j += idle_share
             r.carbon_g = r.energy_j / 3.6e6 * self.ci_g_per_kwh
-        core = s.core
-        served = core.served
-        total_tokens = sum(r.n_tokens for r in s.responses)
-        self.last_latencies = core.latencies
+            if s.tracer is not None and r.rid in s.span_ids:
+                s.tracer.annotate(s.span_ids[r.rid], energy_j=r.energy_j,
+                                  carbon_g=r.carbon_g)
+        self.last_latencies = s.core.latencies
         self.last_responses = s.responses
+        # session deltas of the instances' lifetime counters (instances
+        # survive warm reconfiguration)
+        chunks = sum(getattr(i, "prefill_chunks", 0)
+                     for i in self.instances) - s.chunks0
+        hits = sum(getattr(i, "prefix_hit_tokens", 0)
+                   for i in self.instances) - s.hits0
+        copied = sum(getattr(i, "swapin_pages_copied", 0)
+                     for i in self.instances) - s.swap_copied0
+        saved = (sum(getattr(i, "swapin_pages_total", 0)
+                     for i in self.instances) - s.swap_total0) - copied
+        retraces = sum(getattr(i, "retraces", 0)
+                       for i in self.instances) - s.retraces0
+        total_g = s.energy / 3.6e6 * self.ci_g_per_kwh
+        # fold the session totals into the registry; ``_last_stats`` below
+        # is a *view* over it (same samples + same nearest-rank percentile
+        # as the legacy SchedulerCore path, so the numbers are identical)
+        reg = s.registry
+        reg.counter("energy_j").inc(s.energy)
+        reg.counter("carbon_g").inc(total_g)
+        reg.counter("decode_steps").inc(s.decode_steps)
+        reg.counter("preemptions").inc(s.preempt_total)
+        reg.counter("prefill_chunks").inc(chunks)
+        reg.counter("prefix_hit_tokens").inc(hits)
+        reg.counter("swapin_pages_copied").inc(copied)
+        reg.counter("swapin_pages_saved").inc(saved)
+        reg.counter("compile_retraces").inc(retraces)
+        reg.gauge("wall_s").set(wall)
+        served = int(reg.value("requests_served"))
+        total_tokens = int(reg.value("tokens_generated"))
+        lat = reg.histogram("latency_s")
         self._last_stats = {
             "served": served,
-            "p50_s": core.percentile(50.0),
-            "p95_s": core.percentile(95.0),
-            "p99_s": core.percentile(99.0),
-            "mean_accuracy": core.acc_weighted / max(served, 1),
-            "energy_j": s.energy,
-            "carbon_g": s.energy / 3.6e6 * self.ci_g_per_kwh,
+            "p50_s": lat.percentile(50.0),
+            "p95_s": lat.percentile(95.0),
+            "p99_s": lat.percentile(99.0),
+            "mean_accuracy": reg.histogram("accuracy").mean,
+            "energy_j": reg.value("energy_j"),
+            "carbon_g": reg.value("carbon_g"),
             "wall_s": wall,
             "tokens": total_tokens,
             "tokens_per_s": total_tokens / max(wall, 1e-9),
@@ -1342,27 +1489,25 @@ class RealEngine:
             # memory layout actually achieves on a given arena
             "mean_admitted": (s.admitted_sum / s.tick_samples
                               if s.tick_samples else 0.0),
-            "queue_delay_p95_s": (latency_percentile(s.queue_delays, 95.0)
-                                  if s.queue_delays else 0.0),
-            "ttft_p95_s": (latency_percentile(s.ttfts, 95.0)
-                           if s.ttfts else 0.0),
+            "queue_delay_p95_s":
+                reg.histogram("queue_delay_s").percentile(95.0),
+            "ttft_p95_s": reg.histogram("ttft_s").percentile(95.0),
             "blocks_peak": s.blocks_peak,
             "preemptions": s.preempt_total,
-            "prefill_chunks": sum(getattr(i, "prefill_chunks", 0)
-                                  for i in self.instances) - s.chunks0,
-            "prefix_hit_tokens": sum(getattr(i, "prefix_hit_tokens", 0)
-                                     for i in self.instances) - s.hits0,
+            "prefill_chunks": chunks,
+            "prefix_hit_tokens": hits,
             # partial swap-in: pages a full restore would have copied vs
             # pages actually written back (the gap = tree-resident reuse)
-            "swapin_pages_copied": sum(getattr(i, "swapin_pages_copied", 0)
-                                       for i in self.instances)
-                                   - s.swap_copied0,
-            "partial_swapin_pages_saved":
-                (sum(getattr(i, "swapin_pages_total", 0)
-                     for i in self.instances) - s.swap_total0)
-                - (sum(getattr(i, "swapin_pages_copied", 0)
-                       for i in self.instances) - s.swap_copied0),
+            "swapin_pages_copied": copied,
+            "partial_swapin_pages_saved": saved,
+            "compile_retraces": retraces,
         }
+        if self.telemetry is not None and self.telemetry.feed is not None:
+            # one exact segment per session: feed totals stay equal to the
+            # engine's charged joules/grams with no re-derivation
+            self.telemetry.feed.record_segment(self._feed_clock, wall,
+                                               s.energy, total_g)
+        self._feed_clock += wall
         self._session = None
 
     # --- bulk-prompt convenience ---------------------------------------------

@@ -35,6 +35,44 @@ class SchedulerPolicy:
                ) -> Optional[int]:
         raise NotImplementedError
 
+    # --- hold bookkeeping (observability) ------------------------------------
+    # The carbon policies call these from ``select``: ``note_hold`` the first
+    # time an entry is parked, ``note_release`` the first time it becomes a
+    # candidate again (with the reason: "valley" / "threshold" / "runway").
+    # Backends read ``hold_info`` at completion to surface ``held_s`` and the
+    # release reason on the InferenceResponse and to emit the "hold" trace
+    # span.  Timestamps are whatever clock ``select`` received (session-
+    # relative on both the real engine and the DES), so ``held_s`` is a plain
+    # duration either way.
+    def reset_holds(self) -> None:
+        """Forget hold state (the real engine calls this at session open —
+        request ids may repeat across serve sessions)."""
+        self.__dict__["_holds"] = {}
+
+    def note_hold(self, rid: int, now: Optional[float]) -> None:
+        if now is None:
+            return
+        holds = self.__dict__.setdefault("_holds", {})
+        if rid not in holds:
+            holds[rid] = [float(now), None, None]   # t_first, t_release, why
+
+    def note_release(self, rid: int, now: Optional[float],
+                     reason: str) -> None:
+        if now is None:
+            return
+        rec = self.__dict__.setdefault("_holds", {}).get(rid)
+        if rec is not None and rec[1] is None:
+            rec[1] = float(now)
+            rec[2] = reason
+
+    def hold_info(self, rid: int):
+        """(t_first_hold, t_release, reason) for a request that was held and
+        released, else None (never held, or still parked)."""
+        rec = self.__dict__.get("_holds", {}).get(rid)
+        if rec is None or rec[1] is None:
+            return None
+        return (rec[0], rec[1], rec[2])
+
     def select_prefill(self, entries: Sequence, now: Optional[float] = None
                        ) -> int:
         """Ordering for an instance's chunked-prefill queue.
@@ -123,8 +161,16 @@ class CarbonAwarePolicy(SchedulerPolicy):
             return None
         clean = self.ci_fn(now) <= self.ci_threshold
         inf = float("inf")
-        candidates = [i for i, e in enumerate(entries)
-                      if clean or self._must_release(e, now)]
+        candidates = []
+        for i, e in enumerate(entries):
+            if self._must_release(e, now):
+                candidates.append(i)
+                self.note_release(e.rid, now, "runway")
+            elif clean:
+                candidates.append(i)
+                self.note_release(e.rid, now, "threshold")
+            else:
+                self.note_hold(e.rid, now)
         if not candidates:
             return None                        # hold: grid dirty, runway wide
         return min(candidates,
@@ -207,14 +253,22 @@ class CarbonForecastPolicy(SchedulerPolicy):
         self._memo[key] = valley
         return valley
 
-    def _release(self, e, now: float, ci_now: float) -> bool:
+    def _release_reason(self, e, now: float,
+                        ci_now: float) -> Optional[str]:
+        """Why this entry may run now — "runway" / "threshold" / "valley" —
+        or None while it should keep waiting for a better valley."""
         runway = self._runway(e, now)
         if runway <= 0.0:
-            return True                              # force-release
+            return "runway"                          # force-release
         if self.ci_threshold is not None and ci_now <= self.ci_threshold:
-            return True                              # grid already clean
+            return "threshold"                       # grid already clean
         valley = self._valley(now, runway)
-        return ci_now <= valley * (1.0 + self.valley_tolerance)
+        if ci_now <= valley * (1.0 + self.valley_tolerance):
+            return "valley"
+        return None
+
+    def _release(self, e, now: float, ci_now: float) -> bool:
+        return self._release_reason(e, now, ci_now) is not None
 
     def select(self, entries, now=None):
         for i, e in enumerate(entries):        # interactive: plain FIFO
@@ -224,8 +278,14 @@ class CarbonForecastPolicy(SchedulerPolicy):
             return None
         now_f = float(now) if now is not None else 0.0
         ci_now = self.ci_fn(now_f, 0.0)
-        candidates = [i for i, e in enumerate(entries)
-                      if self._release(e, now_f, ci_now)]
+        candidates = []
+        for i, e in enumerate(entries):
+            reason = self._release_reason(e, now_f, ci_now)
+            if reason is not None:
+                candidates.append(i)
+                self.note_release(e.rid, now, reason)
+            else:
+                self.note_hold(e.rid, now)
         if not candidates:
             return None                        # hold: a better valley is near
         inf = float("inf")

@@ -36,6 +36,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 from repro.core import config_graph as CG
 from repro.core import perf_model as PM
 from repro.core.catalog import Variant
+from repro.obs import MetricsRegistry, Telemetry
 from repro.serving.api import DONE, InferenceRequest, InferenceResponse
 from repro.serving.policies import SchedulerPolicy, make_policy
 from repro.serving.scheduler import SchedulerCore, latency_percentile
@@ -246,10 +247,20 @@ class DESBackend:
                  policy: Union[str, SchedulerPolicy, None] = "fifo",
                  ci_g_per_kwh: Union[float, Callable[[float], float]] = 0.0,
                  tokens_ref: int = 8,
-                 hold_retry_s: float = 60.0):
+                 hold_retry_s: float = 60.0,
+                 telemetry: Optional[Telemetry] = None):
         self.g = g
         self.des = des
         self.policy = make_policy(policy)
+        self.policy.reset_holds()
+        # single-session backend: one registry for its whole life; the
+        # tracer (if any) is the caller's persistent recorder
+        self.telemetry = telemetry
+        self.registry = MetricsRegistry.standard("des")
+        if telemetry is not None:
+            telemetry.registry = self.registry
+        self.tracer = telemetry.tracer if telemetry is not None else None
+        self._span_ids: Dict[int, int] = {}     # rid → "request" span sid
         self.ci_g_per_kwh = ci_g_per_kwh
         self.tokens_ref = tokens_ref       # decode budget the nominal maps to
         self.hold_retry_s = hold_retry_s   # clock hop when the policy parks
@@ -282,6 +293,7 @@ class DESBackend:
         self._reqs[req.rid] = req
         self._meters[req.rid] = 0.0
         self._carbon[req.rid] = 0.0
+        self.registry.counter("requests_submitted").inc()
         self._push(req.arrival_s or 0.0, self._ARRIVE, (req.rid,))
 
     # --- carbon intensity ----------------------------------------------------
@@ -378,14 +390,37 @@ class DESBackend:
         req = self._reqs[rid]
         self.core.complete(rid, t_arr, self.now, inst.variant.accuracy)
         start = self._starts.get(rid, t_arr)
+        hold = self.policy.hold_info(rid)
         resp = InferenceResponse(
             rid=rid, tokens=None, slo=req.slo, priority=req.priority,
             state=DONE, t_arrival=t_arr, t_finish=self.now,
             queue_delay_s=start - t_arr, ttft_s=self.now - t_arr,
             latency_s=self.now - t_arr, energy_j=self._meters[rid],
-            accuracy=inst.variant.accuracy, deadline_s=req.deadline_s)
+            accuracy=inst.variant.accuracy, deadline_s=req.deadline_s,
+            held_s=hold[1] - hold[0] if hold is not None else 0.0,
+            release_reason=hold[2] if hold is not None else None)
         self._responses.append(resp)
         self._done.append(resp)
+        reg = self.registry
+        reg.counter("requests_served").inc()
+        reg.histogram("latency_s").observe(resp.latency_s)
+        reg.histogram("queue_delay_s").observe(resp.queue_delay_s)
+        reg.histogram("ttft_s").observe(resp.ttft_s)
+        reg.histogram("accuracy").observe(resp.accuracy)
+        if not resp.deadline_met:
+            reg.counter("deadline_misses").inc()
+        if hold is not None:
+            reg.counter("holds_released").inc()
+            reg.histogram("held_s").observe(resp.held_s)
+        if self.tracer is not None:
+            tr = self.tracer
+            self._span_ids[rid] = tr.span(
+                "request", t_arr, self.now, rid=rid, slo=req.slo,
+                queue_delay_s=resp.queue_delay_s, n_tokens=0)
+            tr.span("service", start, self.now, rid=rid,
+                    instance=inst.idx, variant=inst.variant.name)
+            if hold is not None:
+                tr.span("hold", hold[0], hold[1], rid=rid, reason=hold[2])
 
     def _drain_completed(self) -> List[InferenceResponse]:
         out, self._responses = self._responses, []
@@ -405,18 +440,29 @@ class DESBackend:
             # share of the idle floor at session-mean CI; for a constant
             # grid this is exactly energy_j × ci
             r.carbon_g = self._carbon.get(r.rid, 0.0) + share_g
+            if self.tracer is not None and r.rid in self._span_ids:
+                self.tracer.annotate(self._span_ids[r.rid],
+                                     energy_j=r.energy_j,
+                                     carbon_g=r.carbon_g)
         carbon_total = sum(r.carbon_g for r in responses)
         core = self.core
+        reg = self.registry
+        reg.counter("energy_j").inc(total_j)
+        reg.counter("carbon_g").inc(carbon_total)
+        reg.gauge("wall_s").set(self.now)
+        if self.telemetry is not None and self.telemetry.feed is not None:
+            self.telemetry.feed.record_segment(0.0, self.now, total_j,
+                                               carbon_total)
         self._stats = {
             "served": core.served,
-            "p50_s": core.percentile(50.0),
-            "p95_s": core.percentile(95.0),
-            "p99_s": core.percentile(99.0),
+            "p50_s": reg.histogram("latency_s").percentile(50.0),
+            "p95_s": reg.histogram("latency_s").percentile(95.0),
+            "p99_s": reg.histogram("latency_s").percentile(99.0),
             "mean_accuracy": core.acc_weighted / max(core.served, 1),
-            "energy_j": total_j,
-            "carbon_g": carbon_total,
+            "energy_j": reg.value("energy_j"),
+            "carbon_g": reg.value("carbon_g"),
             "carbon_g_per_req": carbon_total / max(core.served, 1),
             "wall_s": self.now,
-            "deadline_misses": sum(not r.deadline_met for r in responses),
+            "deadline_misses": int(reg.value("deadline_misses")),
             "preemptions": 0,
         }
