@@ -41,6 +41,10 @@ def decode_attention(q, k_cache, v_cache, length, *, use_kernel: bool = True):
 @functools.partial(jax.jit, static_argnames=("use_kernel",))
 def paged_decode_attention(q, k_arena, v_arena, block_tables, lengths, *,
                            use_kernel: bool = True):
+    """Paged flash-decode over block-table KV.  ``lengths`` must be >= 1 per
+    row: the kernel early-skips whole pages at or past each row's length
+    (``pl.when`` — zero compute for the junk-padded table tail) instead of
+    masking them, which is bit-identical only for a non-empty prefix."""
     if not use_kernel:
         return _ref.paged_decode_attention_ref(q, k_arena, v_arena,
                                                block_tables, lengths)

@@ -10,6 +10,18 @@ block ``table[bi, pj]`` into VMEM — no materialized contiguous copy of the
 cache ever exists.  Padded table entries point at the junk block (id 0);
 their positions sit at or past ``lengths[bi]`` and are masked.
 
+**Page-skip contract**: pages whose first position is at or past
+``lengths[bi]`` (``pj * block_size >= lengths[bi]`` — exactly the junk-
+padded table tail) run ZERO compute under a per-page ``pl.when`` guard
+instead of compute-then-mask; only init (``pj == 0``) and finalize
+(``pj == npj - 1``) stay unconditional.  This is bit-identical to the
+masked path for every ``lengths[bi] >= 1``, because a fully-masked page
+contributes exactly nothing to the online softmax (``alpha == 1``,
+``p == 0``).  Callers must pass ``lengths >= 1`` per row — the serving
+engine only decodes rows with a prefilled prompt, so a zero length never
+reaches the kernel (a hypothetical ``lengths == 0`` row now outputs zeros
+instead of an average over junk, both garbage by the masking contract).
+
 ``kernels/ref.py::paged_decode_attention_ref`` is the CPU oracle (gather +
 ``decode_attention_ref``), sharing the valid-prefix masking contract with
 the slotted kernel.
@@ -41,26 +53,33 @@ def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0, 0]                                   # (g, dh)
-    k = k_ref[0, 0]                                   # (block_size, dh)
-    v = v_ref[0, 0]
-    g, _ = q.shape
+    # page-skip: a page starting at or past the valid prefix is exactly the
+    # junk-padded table tail — every position would mask to NEG_INF and
+    # contribute nothing (alpha == 1, p == 0), so skip the dot products and
+    # the softmax update entirely instead of computing-then-masking.
+    # Bit-identical for lengths >= 1 (see module docstring).
+    @pl.when(pj * block_size < length)
+    def _page():
+        q = q_ref[0, 0]                               # (g, dh)
+        k = k_ref[0, 0]                               # (block_size, dh)
+        v = v_ref[0, 0]
+        g, _ = q.shape
 
-    s = jax.lax.dot_general(q.astype(jnp.float32), k.astype(jnp.float32),
-                            (((1,), (1,)), ((), ()))) * sm_scale  # (g, bs)
-    # logical position of this page's entries in the sequence
-    kpos = pj * block_size + jax.lax.broadcasted_iota(
-        jnp.int32, (g, block_size), 1)
-    s = jnp.where(kpos < length, s, NEG_INF)
+        s = jax.lax.dot_general(q.astype(jnp.float32), k.astype(jnp.float32),
+                                (((1,), (1,)), ((), ()))) * sm_scale  # (g, bs)
+        # logical position of this page's entries in the sequence
+        kpos = pj * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, (g, block_size), 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
 
-    m_prev = m_scr[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-    p = jnp.exp(s - m_new)
-    alpha = jnp.exp(m_prev - m_new)
-    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
-    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
-        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())))
-    m_scr[...] = m_new
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v.astype(jnp.float32), (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
 
     @pl.when(pj == npj - 1)
     def _finalize():
@@ -73,7 +92,9 @@ def paged_decode_attention(q: jnp.ndarray, k_arena: jnp.ndarray,
                            lengths, *, interpret: bool = True) -> jnp.ndarray:
     """q: (b, H, dh); arenas: (n_blocks, block_size, K, dh);
     block_tables: (b, n_pages) i32 arena block ids (0-padded past each row's
-    allocation); lengths: (b,) i32 valid token counts.  Returns (b, H, dh)."""
+    allocation); lengths: (b,) i32 valid token counts, **each >= 1** (pages
+    at or past a row's length are skipped, not masked — see the module
+    docstring's page-skip contract).  Returns (b, H, dh)."""
     b, H, dh = q.shape
     _, bs, K, _ = k_arena.shape
     n_pages = block_tables.shape[1]

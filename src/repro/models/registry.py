@@ -119,3 +119,17 @@ def decode_paged(params: Params, arena: Params, batch: dict, cfg: ModelConfig,
     are host-managed; inactive rows write to the junk block."""
     return T.decode_paged_lm(params, arena, batch["tokens"], cfg, tables,
                              lengths, active)
+
+
+def decode_paged_multi(params: Params, arena: Params, batch: dict,
+                       cfg: ModelConfig, tables: jnp.ndarray,
+                       lengths: jnp.ndarray, active: jnp.ndarray,
+                       n_steps: int
+                       ) -> Tuple[jnp.ndarray, Params, jnp.ndarray,
+                                  jnp.ndarray]:
+    """``n_steps`` fused greedy paged decode steps with on-device token
+    feedback -> (toks (n_steps, b), new_arena, next (b, 1), lengths (b,)).
+    Bit-identical to ``n_steps`` host-fed :func:`decode_paged` calls; the
+    caller guarantees block-table headroom and ``remaining >= n_steps``."""
+    return T.decode_paged_multi_lm(params, arena, batch["tokens"], cfg,
+                                   tables, lengths, active, n_steps)

@@ -618,6 +618,47 @@ def decode_paged_lm(params: Params, arena: Params, tokens: jnp.ndarray,
     return logits[:, 0, :], {"k": k2, "v": v2}
 
 
+def decode_paged_multi_lm(params: Params, arena: Params, tokens: jnp.ndarray,
+                          cfg: ModelConfig, tables: jnp.ndarray,
+                          lengths: jnp.ndarray, active: jnp.ndarray,
+                          n_steps: int
+                          ) -> Tuple[jnp.ndarray, Params, jnp.ndarray,
+                                     jnp.ndarray]:
+    """``n_steps`` fused greedy decode steps over a paged batch — the
+    device-resident decode loop.
+
+    Each iteration is exactly one :func:`decode_paged_lm` step followed by
+    the greedy feedback the serving engine used to run on the host: the
+    argmax token becomes the next input for active rows and their lengths
+    advance by one, all inside a single ``lax.fori_loop`` so the host never
+    sees intermediate state.  Inactive rows keep their token/length and
+    scatter into the junk block.  The caller guarantees every active row's
+    block table covers ``lengths + n_steps`` positions and no row finishes
+    mid-loop (``remaining >= n_steps``).
+
+    tokens: (b, 1) i32; returns ``(toks (n_steps, b) i32, new_arena,
+    next (b, 1) i32, lengths (b,) i32)`` — the greedy tokens of every step
+    plus the advanced loop state, bit-identical to ``n_steps`` separate
+    ``decode_paged_lm`` calls with host feedback."""
+    act_col = active[:, None]
+    act_i = active.astype(jnp.int32)
+
+    def body(i, carry):
+        arena, nxt, ln, toks = carry
+        logits, arena = decode_paged_lm(params, arena, nxt, cfg, tables,
+                                        ln, active)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        nxt = jnp.where(act_col, tok[:, None], nxt)
+        ln = ln + act_i
+        toks = jax.lax.dynamic_update_index_in_dim(toks, tok, i, 0)
+        return (arena, nxt, ln, toks)
+
+    toks0 = jnp.zeros((n_steps, tokens.shape[0]), jnp.int32)
+    arena, nxt, lengths, toks = jax.lax.fori_loop(
+        0, n_steps, body, (arena, tokens, lengths, toks0))
+    return toks, arena, nxt, lengths
+
+
 # =============================================================================
 # VLM helper — merge precomputed patch embeddings into the token stream
 # =============================================================================

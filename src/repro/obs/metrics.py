@@ -124,6 +124,16 @@ CATALOG: Dict[str, str] = {
     "accuracy": "histogram",        # per-request serving-variant accuracy
     # engine internals (zero on analytic backends — the names still exist)
     "decode_steps": "counter",
+    "decode_dispatches": "counter",  # jit decode calls (fused: 1 per k steps)
+    # host↔device traffic of the decode hot path.  ``h2d_transfers`` counts
+    # host→device uploads of loop state (event-driven only: steady-state
+    # pipelined decode must add ZERO per tick — the regression gate of the
+    # device-resident loop).  ``host_syncs`` counts *non-overlapped* blocking
+    # device round-trips: a same-tick readback (slotted per-step argmax,
+    # forced pipeline flushes); a landing that had a full tick of lookahead
+    # overlap is not a sync.
+    "host_syncs": "counter",
+    "h2d_transfers": "counter",
     "prefill_chunks": "counter",
     "prefix_hit_tokens": "counter",
     "swapin_pages_copied": "counter",

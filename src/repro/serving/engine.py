@@ -148,7 +148,18 @@ def _paged_fns(ev: EngineVariant) -> dict:
     call scatters a handful of K/V rows into a buffer that is megabytes —
     without donation XLA copies the whole arena per step, and the copy
     dominates the decode tick on large pools.  Callers must treat the
-    passed-in arena as consumed (the instance reassigns from the result)."""
+    passed-in arena as consumed (the instance reassigns from the result).
+
+    ``decode_multi`` is the device-resident hot path: ``k`` fused greedy
+    steps (static — one compile per (bucket, k)) with on-device argmax
+    feedback, returning the advanced ``next``/``lengths`` loop buffers so
+    steady-state decode never uploads host state.  ``next`` and ``lengths``
+    are donated alongside the arena (updated in place); ``tables`` and the
+    active mask are reused read-only across ticks.  ``restore_paged`` /
+    ``gather_pages`` are the swap staging pair: a donated in-place page
+    scatter for swap-in (the un-jitted ``.at[].set`` copied the whole
+    arena) and a page gather whose result is copied device→host
+    asynchronously at swap-out."""
     if "prefill_paged" not in ev.fns:
         cfg = ev.cfg
         ev.fns["prefill_paged"] = jax.jit(
@@ -159,6 +170,16 @@ def _paged_fns(ev: EngineVariant) -> dict:
             lambda p, ar, t, tb, ln, act: R.decode_paged(
                 p, ar, {"tokens": t}, cfg, tb, ln, act),
             donate_argnums=(1,))
+        ev.fns["decode_multi"] = jax.jit(
+            lambda p, ar, t, tb, ln, act, k: R.decode_paged_multi(
+                p, ar, {"tokens": t}, cfg, tb, ln, act, k),
+            static_argnames=("k",), donate_argnums=(1, 2, 4))
+        ev.fns["restore_paged"] = jax.jit(
+            lambda ar, idx, hk, hv: {"k": ar["k"].at[:, idx].set(hk),
+                                     "v": ar["v"].at[:, idx].set(hv)},
+            donate_argnums=(0,))
+        ev.fns["gather_pages"] = jax.jit(
+            lambda ar, idx: (ar["k"][:, idx], ar["v"][:, idx]))
     return ev.fns
 
 
@@ -242,7 +263,14 @@ class _SwapState:
     tree instead of copied from ``host_k``/``host_v`` — a PARTIAL swap-in
     that restores only the evicted tail.  The host image still covers every
     page, so a tree eviction between swap-out and resume just degrades back
-    to a full restore."""
+    to a full restore.
+
+    The device→host copy is STAGED: ``img_k``/``img_v`` start as device
+    arrays (a jitted page gather) with an async host copy already in
+    flight, so swap-out never blocks the decode loop — the transfer
+    overlaps subsequent decode ticks and only materialises as numpy when
+    ``host_k``/``host_v`` are first read (normally at resume, after the
+    copy has long landed)."""
     rid: int
     t_arrival: float
     prompt: np.ndarray
@@ -255,15 +283,60 @@ class _SwapState:
     t_first: Optional[float]
     cached_tokens: int
     preempts: int
-    host_k: np.ndarray             # (L, n_blocks_used, bs, K, dh)
-    host_v: np.ndarray
+    img_k: object                  # (L, >=n_blocks, bs, K, dh) device or np
+    img_v: object
+    nb: int                        # pages actually used (img may be padded)
     tree_blocks: int = 0           # leading pages tree-backed at swap-out
     slo: str = "interactive"
     deadline_s: Optional[float] = None
 
     @property
     def n_blocks(self) -> int:
-        return int(self.host_k.shape[1])
+        return self.nb
+
+    @property
+    def host_k(self) -> np.ndarray:
+        """(L, n_blocks, bs, K, dh) host image — materialises (and caches)
+        the staged device copy on first read."""
+        if not isinstance(self.img_k, np.ndarray):
+            self.img_k = np.asarray(self.img_k)[:, :self.nb]
+        return self.img_k
+
+    @property
+    def host_v(self) -> np.ndarray:
+        if not isinstance(self.img_v, np.ndarray):
+            self.img_v = np.asarray(self.img_v)[:, :self.nb]
+        return self.img_v
+
+
+@dataclasses.dataclass
+class _PendingDecode:
+    """One dispatched-but-not-landed decode call of the pipelined loop: the
+    (k, B) greedy-token device array (async host copy already in flight),
+    the dispatch-time (seq, row) snapshot that maps token columns back to
+    sequences, and enough accounting to charge the work when it lands.
+    Landing in a LATER tick than ``tick_id`` means the readback overlapped
+    a full tick of host work (free); landing in the same tick is a forced
+    flush and counts as a ``host_syncs`` blocking round-trip."""
+    toks: object                          # (k, B) i32 device array
+    rows: List[Tuple["_PagedSeq", int]]   # (seq, dispatch-time row)
+    k: int
+    occupied: int
+    dispatch_s: float
+    tick_id: int
+
+
+@dataclasses.dataclass
+class _PendingFirst:
+    """A prefill's first generated token, still on device: the final
+    chunk's last-position argmax with an async host copy in flight.  The
+    device scalar is scattered into the uploaded ``next`` buffer whenever
+    loop state is pushed (so decode never waits on its value); the host
+    only reads it to record ``seq.tokens[0]`` — one tick later, or
+    immediately (a counted sync) when the request is n_new == 1."""
+    seq: "_PagedSeq"
+    tok: object                           # () i32 device array
+    tick_id: int
 
 
 def _tick_info(prefill_s: float = 0.0, decode_s: float = 0.0,
@@ -307,6 +380,13 @@ class Instance:
         self._next = np.zeros((n_slots, 1), np.int32)   # next decode token
         self._shapes: set = set()        # jit shape keys seen (see _note_shape)
         self.retraces = 0                # lifetime post-warmup shape misses
+        # host↔device traffic (lifetime; sessions report deltas): the
+        # slotted loop is synchronous by design — 2 uploads + 1 blocking
+        # readback per decode step — which is exactly the baseline the
+        # paged pipelined loop is measured against
+        self.host_syncs = 0
+        self.h2d_transfers = 0
+        self.decode_dispatches = 0
 
     # --- lifecycle -----------------------------------------------------------
     def reset(self) -> None:
@@ -398,6 +478,7 @@ class Instance:
         _note_shape(self, ("prefill", pad))
         padded = np.zeros((1, pad), np.int32)
         padded[0, :true_len] = prompt
+        self.h2d_transfers += 1
         logits, k_all, v_all = self._fns["prefill"](self.ev.params,
                                                     jnp.asarray(padded))
         write = min(pad, self.max_len)   # padded tail beyond capacity is junk
@@ -405,6 +486,7 @@ class Instance:
             self._fns["write"](self.cache["k"], self.cache["v"],
                                self.cache["lengths"], k_all[:, :, :write],
                                v_all[:, :, :write], slot, true_len)
+        self.host_syncs += 1             # blocking first-token readback
         first = int(jnp.argmax(logits[0, true_len - 1]))
         state = _SlotState(rid, t_arrival, remaining=n_new - 1,
                            tokens=[first], priority=priority)
@@ -419,9 +501,12 @@ class Instance:
         (rid, token) emissions of every active row for streaming)."""
         active = np.array([s is not None for s in self.slots])
         _note_shape(self, ("decode",))
+        self.h2d_transfers += 2          # next-token + active-mask uploads
         logits, self.cache = self._fns["decode"](
             self.ev.params, self.cache, jnp.asarray(self._next),
             jnp.asarray(active))
+        self.host_syncs += 1             # blocking per-step token readback
+        self.decode_dispatches += 1
         toks = np.asarray(jnp.argmax(logits, axis=-1))
         finished: List[_SlotState] = []
         emitted: List[Tuple[int, int]] = []
@@ -437,10 +522,11 @@ class Instance:
                 self.slots[i] = None
         return finished, emitted
 
-    def tick(self, now: Optional[float] = None
+    def tick(self, now: Optional[float] = None, allow_fused: bool = True
              ) -> Tuple[List[_SlotState], Dict[str, object]]:
         """One scheduler tick = one batched decode step (slotted prefill
-        runs at admission; ``now`` is unused here — uniform tick surface)."""
+        runs at admission; ``now`` / ``allow_fused`` are unused here —
+        uniform tick surface with :class:`PagedInstance`)."""
         occ = self.occupied
         if occ == 0:
             return [], _tick_info()
@@ -513,6 +599,10 @@ class _PagedSeq:
     t_first: Optional[float] = None
     priority: int = 0
     preempts: int = 0               # times this sequence was swapped out
+    pending_steps: int = 0          # decode steps dispatched but not landed
+                                    # (``remaining`` is decremented at
+                                    # DISPATCH; completion waits for landing)
+    pending_first: Optional["_PendingFirst"] = None
     slo: str = "interactive"
     deadline_s: Optional[float] = None
     seq: int = 0                    # admission order (policy tie-break)
@@ -544,7 +634,8 @@ class PagedInstance:
                  chunk_blocks: int = 2, prefix_caching: bool = True,
                  cache_watermark: float = 0.25, chunk_burst: int = 4,
                  preemption: bool = False,
-                 policy: Optional[SchedulerPolicy] = None):
+                 policy: Optional[SchedulerPolicy] = None,
+                 pipeline: bool = True, fused_steps: int = 8):
         self.ev = ev
         self.chips = chips
         self.block_size = block_size
@@ -585,6 +676,35 @@ class PagedInstance:
         self.swapin_pages_copied = 0
         self._shapes: set = set()        # jit shape keys seen (see _note_shape)
         self.retraces = 0                # lifetime post-warmup shape misses
+        # --- device-resident decode hot path ---------------------------------
+        # ``pipeline=False`` is the synchronous reference loop: loop state is
+        # re-uploaded every tick and every dispatch lands in its own tick —
+        # the pre-pipelining behavior, kept as the greedy-parity oracle.
+        self.pipeline = pipeline
+        self.fused_steps = max(int(fused_steps), 1)
+        # device mirrors of (next, tables, lengths, active): uploaded only
+        # when an EVENT (admission, prefill completion, release, preemption,
+        # table growth, compaction) dirties the host copies — steady-state
+        # decode runs entirely on device
+        self._dev: Optional[dict] = None
+        self._dev_B = 0
+        self._dev_active: Optional[np.ndarray] = None
+        self._dirty = True
+        self._inflight: Deque[_PendingDecode] = deque()
+        self._pending_first: List[_PendingFirst] = []
+        self._tick_id = 0
+        # per-tick landing accumulators (reset at each tick() entry; the
+        # flush helpers append here so _swap_out can force-land mid-tick)
+        self._ev_emitted: List[Tuple[int, int]] = []
+        self._ev_finished: List[_PagedSeq] = []
+        self._ld_s = 0.0                 # landed decode seconds this tick
+        self._ld_steps = 0
+        self._ld_occ = 0
+        self._ld_rids: List[int] = []
+        # host↔device traffic + dispatch counters (lifetime; session deltas)
+        self.host_syncs = 0
+        self.h2d_transfers = 0
+        self.decode_dispatches = 0
 
     # --- lifecycle -----------------------------------------------------------
     def reset(self) -> None:
@@ -598,11 +718,19 @@ class PagedInstance:
         self.lengths[:] = 0
         self._next[:] = 0
         self._prefillq.clear()
+        self._inflight.clear()
+        self._pending_first.clear()
+        self._dev = None
+        self._dev_B = 0
+        self._dev_active = None
+        self._dirty = True
 
     def warmup(self) -> None:
         """Compile every shape the serve loop can reach: the (single)
-        fixed-size prefill chunk plus one decode per power-of-two row bucket
-        (``_row_buckets`` — the batch-axis analogue of ``serve_buckets``).
+        fixed-size prefill chunk plus, per power-of-two row bucket
+        (``_row_buckets`` — the batch-axis analogue of ``serve_buckets``),
+        the fused decode at both step counts the loop dispatches (k = 1
+        pipelined single-step, k = ``fused_steps`` when eligible).
         ``true_c = 0`` / an all-False mask route every warmup write to the
         junk block, so logical state is untouched."""
         dummy = jnp.zeros((1, self.chunk_tokens), jnp.int32)
@@ -612,13 +740,16 @@ class PagedInstance:
                 self.ev.params, dummy, self.arena,
                 jnp.zeros((span,), jnp.int32), 0, 0)
             lg.block_until_ready()
+        ks = sorted({1, self.fused_steps})
         for B in self._row_buckets():
-            self._shapes.add(("decode_paged", B))
-            lg, self.arena = self._fns["decode_paged"](
-                self.ev.params, self.arena, jnp.asarray(self._next[:B]),
-                jnp.asarray(self.tables[:B]), jnp.asarray(self.lengths[:B]),
-                jnp.zeros((B,), bool))
-            lg.block_until_ready()
+            for k in ks:
+                self._shapes.add(("decode_multi", B, k))
+                toks, self.arena, _, _ = self._fns["decode_multi"](
+                    self.ev.params, self.arena, jnp.asarray(self._next[:B]),
+                    jnp.asarray(self.tables[:B]),
+                    jnp.asarray(self.lengths[:B]), jnp.zeros((B,), bool),
+                    k=k)
+                toks.block_until_ready()
 
     # --- capacity ------------------------------------------------------------
     @property
@@ -695,6 +826,7 @@ class PagedInstance:
         self.rows[row] = seq
         self._prefillq.append(seq)
         self.prefix_hit_tokens += n_cached
+        self._dirty = True               # admission event: mirrors changed
         return seq, 0.0
 
     # --- preemption / swap ---------------------------------------------------
@@ -727,11 +859,25 @@ class PagedInstance:
             self.prefix.evict(n_tail - self.alloc.num_free)
         tail = self.alloc.alloc(n_tail)
         if n_tail:
-            idx = jnp.asarray(np.asarray(tail, np.int32))
-            self.arena["k"] = self.arena["k"].at[:, idx].set(
-                jnp.asarray(swap.host_k[:, len(reused):]))
-            self.arena["v"] = self.arena["v"].at[:, idx].set(
-                jnp.asarray(swap.host_v[:, len(reused):]))
+            # jitted donated page scatter: the un-jitted ``.at[].set`` copied
+            # the WHOLE arena per restore.  The tail count is padded to its
+            # bucket (extra slots write zero pages into junk block 0, which
+            # is garbage by contract) so restore compiles per bucket, not
+            # per tail length.
+            pb = _pow2_bucket(n_tail, self.n_pages)
+            idx = np.zeros((pb,), np.int32)
+            idx[:n_tail] = tail
+            hk = swap.host_k[:, len(reused):]
+            hv = swap.host_v[:, len(reused):]
+            if pb != n_tail:
+                pad = [(0, 0)] * hk.ndim
+                pad[1] = (0, pb - n_tail)
+                hk = np.pad(hk, pad)
+                hv = np.pad(hv, pad)
+            self.h2d_transfers += 3      # index vector + K + V page uploads
+            self.arena = self._fns["restore_paged"](
+                self.arena, jnp.asarray(idx), jnp.asarray(hk),
+                jnp.asarray(hv))
         blocks = reused + tail
         self.swapin_pages_total += nb
         self.swapin_pages_copied += n_tail
@@ -748,6 +894,7 @@ class PagedInstance:
         self.lengths[row] = swap.n_ctx
         self._next[row, 0] = swap.next_token
         self.rows[row] = seq
+        self._dirty = True               # swap-in event: mirrors changed
         return seq, 0.0
 
     def _select_victim(self, exclude: _PagedSeq) -> Optional[_PagedSeq]:
@@ -770,21 +917,35 @@ class PagedInstance:
         those are the pages ``resume`` will try to re-acquire by reference
         instead of copying back.  The host image still saves every page —
         the snapshot is a ceiling, not a promise, because LRU eviction may
-        drop the nodes before re-admission."""
+        drop the nodes before re-admission.
+
+        The page copy is STAGED: a jitted (bucket-padded) device gather
+        with ``copy_to_host_async`` started immediately, so the transfer
+        overlaps the decode ticks between swap-out and resume instead of
+        blocking the loop here.  Any in-flight decode work is landed first
+        (the image must contain the sequence's true tokens/lengths)."""
+        self._flush_all()                # pending tokens become part of image
         n_ctx = int(self.lengths[seq.row])
         nb = self.alloc.blocks_for_tokens(max(n_ctx, 1))
-        used = np.asarray(seq.blocks[:nb], np.int32)
+        pb = _pow2_bucket(nb, self.n_pages)
+        idx = np.zeros((pb,), np.int32)  # pad with junk pages: gathered then
+        idx[:nb] = seq.blocks[:nb]       # sliced off at materialisation
         tree_blocks = 0
         if self.prefix is not None:
             tree_blocks = self.prefix.live_prefix_blocks(seq.prompt, limit=nb)
+        img_k, img_v = self._fns["gather_pages"](self.arena, jnp.asarray(idx))
+        for img in (img_k, img_v):
+            try:
+                img.copy_to_host_async()
+            except AttributeError:       # non-jax array stand-ins in tests
+                pass
         swap = _SwapState(
             rid=seq.rid, t_arrival=seq.t_arrival, prompt=seq.prompt,
             n_new=seq.n_new, priority=seq.priority, tokens=list(seq.tokens),
             remaining=seq.remaining, n_ctx=n_ctx,
             next_token=int(self._next[seq.row, 0]), t_first=seq.t_first,
             cached_tokens=seq.cached_tokens, preempts=seq.preempts + 1,
-            host_k=np.asarray(self.arena["k"][:, used]),
-            host_v=np.asarray(self.arena["v"][:, used]),
+            img_k=img_k, img_v=img_v, nb=nb,
             tree_blocks=tree_blocks, slo=seq.slo, deadline_s=seq.deadline_s)
         self.alloc.free(seq.blocks)      # decref: prefix-tree refs survive
         self._clear_row(seq)
@@ -814,6 +975,12 @@ class PagedInstance:
                 bid = self.alloc.alloc(1)[0]
                 needy.blocks.append(bid)
                 self.tables[needy.row, len(needy.blocks) - 1] = bid
+                self._dirty = True       # table growth: mirrors changed
+                continue
+            if self._inflight or self._pending_first:
+                # land in-flight work before choosing a victim: a pending
+                # completion may release its blocks and spare the swap
+                self._flush_all()
                 continue
             victim = self._select_victim(exclude=needy) or needy
             swapped.append(self._swap_out(victim))
@@ -829,6 +996,7 @@ class PagedInstance:
         self.lengths[seq.row] = 0
         self._next[seq.row, 0] = 0
         self._compact(seq.row)
+        self._dirty = True               # release event: mirrors changed
 
     def _compact(self, hole: int) -> None:
         """Keep occupied rows a contiguous prefix: move the highest occupied
@@ -878,7 +1046,13 @@ class PagedInstance:
         """Advance one chunk of ``seq``'s prompt through the arena.  The
         final chunk's last-position logits yield the first generated token
         (never discarded), and the prompt's full blocks register in the
-        prefix tree for future sharing."""
+        prefix tree for future sharing.
+
+        The first token STAYS ON DEVICE: its argmax is dispatched (with an
+        async host copy) instead of the old blocking ``int(jnp.argmax(...))``
+        per final chunk, and the pending device scalar is scattered into the
+        ``next`` buffer at the following upload — the host records its value
+        through the pipelined landing path (``_land_first``)."""
         start = seq.n_done
         true_c = min(self.chunk_tokens, len(seq.prompt) - start)
         padded = np.zeros((1, self.chunk_tokens), np.int32)
@@ -888,20 +1062,136 @@ class PagedInstance:
         span = _pow2_bucket(-(-(start + true_c) // self.block_size),
                             self.n_pages)
         _note_shape(self, ("prefill_paged", span))
+        self.h2d_transfers += 2          # padded chunk + table-slice uploads
         logits, self.arena = self._fns["prefill_paged"](
             self.ev.params, jnp.asarray(padded), self.arena,
             jnp.asarray(self.tables[seq.row][:span]), start, true_c)
         seq.n_done += true_c
         self.prefill_chunks += 1
         if seq.prefilled:
-            first = int(jnp.argmax(logits[0, true_c - 1]))
-            seq.tokens.append(first)
+            tok = jnp.argmax(logits[0, true_c - 1]).astype(jnp.int32)
+            try:
+                tok.copy_to_host_async()
+            except AttributeError:
+                pass
+            pf = _PendingFirst(seq, tok, self._tick_id)
+            self._pending_first.append(pf)
+            seq.pending_first = pf
             seq.remaining -= 1
             seq.t_first = time.perf_counter()
             self.lengths[seq.row] = len(seq.prompt)
-            self._next[seq.row, 0] = first
+            self._dirty = True           # row activation: mirrors changed
             if self.prefix is not None:
                 self.prefix.insert(seq.prompt, seq.blocks)
+
+    # --- pipelined landing ----------------------------------------------------
+    def _land_first(self, pf: _PendingFirst) -> None:
+        """Record a pending first token on the host.  Landing in the tick
+        that created it is a forced (blocking) round-trip and counts as a
+        ``host_syncs``; landing later overlapped host work for free."""
+        seq = pf.seq
+        if pf.tick_id == self._tick_id:
+            self.host_syncs += 1
+        first = int(np.asarray(pf.tok))
+        seq.tokens.append(first)         # tokens[0]: decode landings wait
+        self._ev_emitted.append((seq.rid, first))
+        seq.pending_first = None
+        if pf in self._pending_first:
+            self._pending_first.remove(pf)
+        if self.rows[seq.row] is seq:
+            self._next[seq.row, 0] = first
+
+    def _land_item(self, item: _PendingDecode) -> None:
+        """Land one dispatched decode call: block on its (k, B) token
+        readback, append tokens in dispatch order, advance the landing
+        accumulators, and complete sequences whose final tokens arrived.
+        A sequence's pending first token (if any) lands first — per-request
+        token order is part of the greedy-parity contract."""
+        if item.tick_id == self._tick_id:
+            self.host_syncs += 1         # same-tick landing: no overlap
+        t0 = time.perf_counter()
+        toks = np.asarray(item.toks)     # blocks until the async copy lands
+        self._ld_s += item.dispatch_s + (time.perf_counter() - t0)
+        self._ld_steps += item.k
+        self._ld_occ = max(self._ld_occ, item.occupied)
+        done: List[_PagedSeq] = []
+        for s, col in item.rows:
+            if s.pending_first is not None:
+                self._land_first(s.pending_first)
+            self._ld_rids.append(s.rid)
+            for i in range(item.k):
+                t = int(toks[i, col])
+                s.tokens.append(t)
+                self._ev_emitted.append((s.rid, t))
+            s.pending_steps -= item.k
+            self._next[s.row, 0] = int(toks[item.k - 1, col])
+            if s.remaining <= 0 and s.pending_steps <= 0:
+                done.append(s)
+        for s in done:                   # release AFTER the sweep: _compact
+            self._ev_finished.append(s)  # moves rows and would skew columns
+            self._release(s)
+
+    def _land_ready(self) -> None:
+        """Collect readbacks dispatched BEFORE this tick — their async
+        copies overlapped at least one full tick of host work, so these
+        landings are free (no ``host_syncs``)."""
+        for pf in list(self._pending_first):
+            if pf.tick_id < self._tick_id:
+                self._land_first(pf)
+        while self._inflight and self._inflight[0].tick_id < self._tick_id:
+            self._land_item(self._inflight.popleft())
+
+    def _flush_decodes(self) -> None:
+        """Force-land every in-flight decode call (upload precondition:
+        host mirrors must equal device state).  Pending FIRST tokens stay
+        pending — the upload scatters their device scalars into ``next``
+        instead of blocking on them."""
+        while self._inflight:
+            self._land_item(self._inflight.popleft())
+
+    def _flush_all(self) -> None:
+        """Force-land everything, first tokens included — the swap-out /
+        victim-selection path, where the host image must carry the true
+        tokens, lengths, and next-token of every sequence."""
+        self._flush_decodes()
+        for pf in list(self._pending_first):
+            self._land_first(pf)
+
+    def _upload(self, B: int, active: np.ndarray) -> None:
+        """Push fresh loop state (next, tables, lengths, active) for row
+        bucket ``B`` — the EVENT path.  Unlanded first tokens are scattered
+        into the uploaded ``next`` buffer as device scalars, so a prefill
+        completion never blocks the loop on its own argmax."""
+        assert not self._inflight, "upload with stale in-flight decodes"
+        nxt = jnp.asarray(self._next[:B])
+        for pf in self._pending_first:
+            nxt = nxt.at[pf.seq.row, 0].set(pf.tok)
+        self._dev = {"next": nxt,
+                     "tables": jnp.asarray(self.tables[:B]),
+                     "lengths": jnp.asarray(self.lengths[:B]),
+                     "active": jnp.asarray(active[:B])}
+        self.h2d_transfers += 4
+        self._dev_B = B
+        self._dev_active = active[:B].copy()
+        self._dirty = False
+
+    def _choose_k(self, act_rows: List[_PagedSeq]) -> int:
+        """Fused-dispatch step count: ``fused_steps`` when every active row
+        can absorb k on-device steps with zero host intervention — no
+        prefill work queued, ``remaining >= k`` (no completion inside the
+        window), and block-table headroom for k more tokens (no growth or
+        swap inside the window) — else 1.  Fusion is bit-identical to k
+        single steps (`decode_paged_multi`), so eligibility only shapes
+        dispatch granularity, never tokens."""
+        k = self.fused_steps
+        if k <= 1 or not self.pipeline or self._prefillq:
+            return 1
+        bs = self.block_size
+        for s in act_rows:
+            if (s.remaining < k
+                    or len(s.blocks) * bs < int(self.lengths[s.row]) + k):
+                return 1
+        return k
 
     def _decodable(self) -> int:
         return sum(1 for s in self.rows
@@ -921,12 +1211,23 @@ class PagedInstance:
             return 0
         return self.policy.select_prefill(list(self._prefillq), now)
 
-    def tick(self, now: Optional[float] = None
+    def tick(self, now: Optional[float] = None, allow_fused: bool = True
              ) -> Tuple[List[_PagedSeq], Dict[str, object]]:
-        """One scheduler tick: an adaptive prefill budget, then one batched
-        decode step over all decoding rows.  ``now`` is the engine's
-        session-relative clock, passed through to the policy ordering the
-        prefill queue (deadline / CI decisions).
+        """One scheduler tick of the PIPELINED decode loop: an adaptive
+        prefill budget, then one batched decode DISPATCH over all decoding
+        rows (fused to ``fused_steps`` device-fed steps when eligible),
+        then the LANDING of whatever readbacks finished overlapping earlier
+        ticks.  ``now`` is the engine's session-relative clock, passed
+        through to the policy ordering the prefill queue.
+
+        Steady state touches the host ZERO times per tick: loop state lives
+        on device (``_dev``), the greedy token feeds back inside the jitted
+        call, and tick N's (k, B) token block lands while tick N+1's
+        dispatch is already queued.  Only EVENTS (admission, prefill
+        completion, release, growth, preemption) dirty the mirrors and
+        trigger a flush + one re-upload.  The tick info therefore describes
+        LANDED decode work — possibly dispatched an earlier tick — while
+        the prefill fields stay dispatch-accounted.
 
         Prefill policy: while the batch is decode-starved (fewer decodable
         rows than half the row capacity), burst up to ``chunk_burst``
@@ -934,8 +1235,13 @@ class PagedInstance:
         stall — and back off to a SINGLE chunk per tick once decode
         concurrency is healthy, so a 512-token admission interleaves with
         running decodes instead of pausing them for its whole prefill."""
-        finished: List[_PagedSeq] = []
-        emitted: List[Tuple[int, int]] = []
+        self._tick_id += 1
+        self._ev_emitted = []
+        self._ev_finished = []
+        self._ld_s = 0.0
+        self._ld_steps = 0
+        self._ld_occ = 0
+        self._ld_rids = []
         prefill_rids: List[Tuple[int, float]] = []
         prefill_s = 0.0
         if self._prefillq:
@@ -955,55 +1261,72 @@ class PagedInstance:
                 prefill_s += dtc
                 burst += 1
                 if seq.prefilled:
-                    emitted.append((seq.rid, seq.tokens[-1]))
                     del self._prefillq[qi]
-                    if seq.remaining <= 0:       # n_new == 1
-                        finished.append(seq)
+                    if seq.remaining <= 0:       # n_new == 1: the request IS
+                        self._land_first(seq.pending_first)  # its first token
+                        self._ev_finished.append(seq)
                         self._release(seq)
         # decode-time block pressure: grow tables on demand, swap victims
         # out when the arena is dry (PREEMPTED lifecycle state)
         preempted = self._ensure_decode_capacity() if self.preemption else []
         active = np.array([s is not None and s.prefilled and s.remaining > 0
                            for s in self.rows])
-        decode_s = 0.0
         occ = int(active.sum())
-        decode_rids: List[int] = []
+        B = self._dev_B
         if occ:
             # occupied rows are a compact prefix (see _compact): decode over
             # the smallest power-of-two row bucket covering them, so 5 live
             # sequences cost 8 rows of gather+compute, not max_seqs
             B = _pow2_bucket(self.occupied, self.max_seqs)
-            _note_shape(self, ("decode_paged", B))
-            decode_rids = [s.rid for s in self.rows[:B]
-                           if s is not None and s.prefilled
-                           and s.remaining > 0]
+            if (self._dirty or self._dev is None or B != self._dev_B
+                    or not self.pipeline
+                    or not np.array_equal(active[:B], self._dev_active)):
+                # EVENT path: land in-flight work (mirrors must equal the
+                # device state), then push fresh loop state once
+                self._flush_decodes()    # may release rows -> recompute
+                active = np.array([s is not None and s.prefilled
+                                   and s.remaining > 0 for s in self.rows])
+                occ = int(active.sum())
+                if occ:
+                    B = _pow2_bucket(self.occupied, self.max_seqs)
+                    self._upload(B, active)
+        if occ:
+            act_rows = [s for s in self.rows[:B]
+                        if s is not None and s.prefilled and s.remaining > 0]
+            k = self._choose_k(act_rows) if allow_fused else 1
+            _note_shape(self, ("decode_multi", B, k))
             t1 = time.perf_counter()
-            logits, self.arena = self._fns["decode_paged"](
-                self.ev.params, self.arena, jnp.asarray(self._next[:B]),
-                jnp.asarray(self.tables[:B]), jnp.asarray(self.lengths[:B]),
-                jnp.asarray(active[:B]))
-            toks = np.asarray(jnp.argmax(logits, axis=-1))
-            decode_s = time.perf_counter() - t1
-            done_rows = []
-            for i, s in enumerate(list(self.rows[:B])):
-                if not active[i]:
-                    continue
-                s.tokens.append(int(toks[i]))
-                emitted.append((s.rid, int(toks[i])))
-                s.remaining -= 1
-                self.lengths[i] += 1
-                self._next[i, 0] = int(toks[i])
-                if s.remaining <= 0:
-                    done_rows.append(s)
-            for s in done_rows:          # release AFTER the sweep: _compact
-                finished.append(s)       # moves rows and would skew indices
-                self._release(s)
-        return finished, _tick_info(
-            prefill_s=prefill_s, decode_s=decode_s,
-            decode_steps=1 if occ else 0, occupied=occ,
+            toks, self.arena, nxt, ln = self._fns["decode_multi"](
+                self.ev.params, self.arena, self._dev["next"],
+                self._dev["tables"], self._dev["lengths"],
+                self._dev["active"], k=k)
+            self._dev["next"], self._dev["lengths"] = nxt, ln
+            try:
+                toks.copy_to_host_async()
+            except AttributeError:       # non-jax stand-ins in tests
+                pass
+            dispatch_s = time.perf_counter() - t1
+            self.decode_dispatches += 1
+            for s in act_rows:           # predictive mirrors: decremented at
+                s.remaining -= k         # dispatch; truth lands later
+                s.pending_steps += k
+                self.lengths[s.row] += k
+            self._inflight.append(_PendingDecode(
+                toks, [(s, s.row) for s in act_rows], k, occ, dispatch_s,
+                self._tick_id))
+        # LANDING: readbacks dispatched before this tick overlapped a full
+        # tick of host work — collect them for free; the synchronous
+        # reference mode (pipeline=False) lands everything immediately
+        if self.pipeline:
+            self._land_ready()
+        else:
+            self._flush_all()
+        return self._ev_finished, _tick_info(
+            prefill_s=prefill_s, decode_s=self._ld_s,
+            decode_steps=self._ld_steps, occupied=self._ld_occ,
             blocks_in_use=self.alloc.blocks_in_use(),
-            prefill_rids=prefill_rids, decode_rids=decode_rids,
-            emitted=emitted, preempted=preempted)
+            prefill_rids=prefill_rids, decode_rids=self._ld_rids,
+            emitted=self._ev_emitted, preempted=preempted)
 
 
 # =============================================================================
@@ -1059,6 +1382,10 @@ class _Session:
         self.swap_copied0 = sum(getattr(i, "swapin_pages_copied", 0)
                                 for i in instances)
         self.retraces0 = sum(getattr(i, "retraces", 0) for i in instances)
+        self.syncs0 = sum(getattr(i, "host_syncs", 0) for i in instances)
+        self.h2d0 = sum(getattr(i, "h2d_transfers", 0) for i in instances)
+        self.dispatches0 = sum(getattr(i, "decode_dispatches", 0)
+                               for i in instances)
 
     def schedule(self, req: InferenceRequest) -> None:
         if req.arrival_s is None:
@@ -1091,7 +1418,8 @@ class RealEngine:
                  prefix_caching: bool = True,
                  policy: Union[str, SchedulerPolicy, None] = "fifo",
                  preemption: bool = False, ci_g_per_kwh: float = 0.0,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 decode_pipeline: bool = True, fused_steps: int = 8):
         assert kv_layout in ("slotted", "paged"), kv_layout
         assert not (preemption and kv_layout == "slotted"), \
             "preemption requires the paged KV layout (slots never grow)"
@@ -1110,6 +1438,11 @@ class RealEngine:
         self.prefix_caching = prefix_caching
         self.policy = make_policy(policy)
         self.preemption = preemption
+        # decode hot path: ``decode_pipeline=False`` selects the synchronous
+        # reference loop (re-upload + blocking readback every tick) — the
+        # greedy-parity oracle; ``fused_steps`` bounds on-device step fusion
+        self.decode_pipeline = decode_pipeline
+        self.fused_steps = fused_steps
         self.ci_g_per_kwh = ci_g_per_kwh
         # optional unified-telemetry bundle: the engine repoints its
         # ``registry`` at every session open (per-session registries) and
@@ -1136,7 +1469,9 @@ class RealEngine:
                                  chunk_blocks=self.chunk_blocks,
                                  prefix_caching=self.prefix_caching,
                                  preemption=self.preemption,
-                                 policy=self.policy)
+                                 policy=self.policy,
+                                 pipeline=self.decode_pipeline,
+                                 fused_steps=self.fused_steps)
         return Instance(ev, chips, self.n_slots, self.max_len)
 
     def configure(self, graph) -> float:
@@ -1271,11 +1606,21 @@ class RealEngine:
             s.admitted_sum += inst.occupied   # holding cache memory now
             s.tick_samples += 1
             t_tick = time.perf_counter()
-            done, info = inst.tick(s.rel(t_tick))
+            # fused multi-step dispatch stays off while timed arrivals are
+            # outstanding: an open-loop session measures admission latency,
+            # and a k-step device window would delay a mid-window arrival's
+            # prefill behind k queued decode steps
+            done, info = inst.tick(s.rel(t_tick), allow_fused=not s.future)
             s.energy += inst.chips * PM.P_BUSY_W * info["prefill_s"]
             for rid, dtc in info["prefill_rids"]:
                 s.meters[rid] += inst.chips * PM.P_BUSY_W * dtc
             if info["decode_steps"]:
+                # info describes LANDED decode work: ``decode_steps`` model
+                # steps (>= 1 per landed dispatch, k per fused dispatch)
+                # sharing ``decode_s`` wall seconds — aggregates stay
+                # step-weighted so occupancy/inflight means are comparable
+                # across fused and single-step sessions
+                ksteps = info["decode_steps"]
                 occ = info["occupied"]
                 e_dec = PM.instance_power_w(
                     inst.chips, occ / inst.capacity) * info["decode_s"]
@@ -1283,9 +1628,9 @@ class RealEngine:
                 share = e_dec / max(len(info["decode_rids"]), 1)
                 for rid in info["decode_rids"]:
                     s.meters[rid] += share
-                s.decode_steps += 1
-                s.occ_frac_sum += occ / inst.capacity
-                s.inflight_sum += occ
+                s.decode_steps += ksteps
+                s.occ_frac_sum += (occ / inst.capacity) * ksteps
+                s.inflight_sum += occ * ksteps
             s.accounted_s[id(inst)] += info["prefill_s"] + info["decode_s"]
             s.blocks_peak = max(s.blocks_peak, int(info["blocks_in_use"]))
             s.registry.gauge("occupied_rows").set(info["occupied"])
@@ -1298,9 +1643,15 @@ class RealEngine:
                 for rid, dtc in info["prefill_rids"]:
                     tr.span("prefill_chunk", cursor, cursor + dtc, rid=rid)
                     cursor += dtc
+                # one span per LANDED model step (a fused dispatch lands k
+                # steps at once): ``decode_tick`` span count stays equal to
+                # the session's ``decode_steps`` counter
                 if info["decode_steps"]:
-                    tr.span("decode_tick", cursor, cursor + info["decode_s"],
-                            rids=info["decode_rids"], n=info["occupied"])
+                    dt_step = info["decode_s"] / info["decode_steps"]
+                    for _ in range(info["decode_steps"]):
+                        tr.span("decode_tick", cursor, cursor + dt_step,
+                                rids=info["decode_rids"], n=info["occupied"])
+                        cursor += dt_step
                 if info["blocks_in_use"]:
                     tr.counter("blocks_in_use", cursor,
                                info["blocks_in_use"])
@@ -1449,6 +1800,12 @@ class RealEngine:
                      for i in self.instances) - s.swap_total0) - copied
         retraces = sum(getattr(i, "retraces", 0)
                        for i in self.instances) - s.retraces0
+        syncs = sum(getattr(i, "host_syncs", 0)
+                    for i in self.instances) - s.syncs0
+        h2d = sum(getattr(i, "h2d_transfers", 0)
+                  for i in self.instances) - s.h2d0
+        dispatches = sum(getattr(i, "decode_dispatches", 0)
+                         for i in self.instances) - s.dispatches0
         total_g = s.energy / 3.6e6 * self.ci_g_per_kwh
         # fold the session totals into the registry; ``_last_stats`` below
         # is a *view* over it (same samples + same nearest-rank percentile
@@ -1463,6 +1820,9 @@ class RealEngine:
         reg.counter("swapin_pages_copied").inc(copied)
         reg.counter("swapin_pages_saved").inc(saved)
         reg.counter("compile_retraces").inc(retraces)
+        reg.counter("host_syncs").inc(syncs)
+        reg.counter("h2d_transfers").inc(h2d)
+        reg.counter("decode_dispatches").inc(dispatches)
         reg.gauge("wall_s").set(wall)
         served = int(reg.value("requests_served"))
         total_tokens = int(reg.value("tokens_generated"))
@@ -1501,6 +1861,12 @@ class RealEngine:
             "swapin_pages_copied": copied,
             "partial_swapin_pages_saved": saved,
             "compile_retraces": retraces,
+            # decode-hot-path traffic: blocking host round-trips, explicit
+            # H2D uploads (event-driven only under pipelining), and jitted
+            # decode dispatches (< decode_steps when fusion engaged)
+            "host_syncs": syncs,
+            "h2d_transfers": h2d,
+            "decode_dispatches": dispatches,
         }
         if self.telemetry is not None and self.telemetry.feed is not None:
             # one exact segment per session: feed totals stay equal to the
