@@ -7,16 +7,45 @@ cross-commit diff naturally finds it (``benchmarks/run.py --json``
 refreshes it from the harness).  The schema per section is flat scalars
 only (tokens/s, J/token, TTFT p95, blocks-in-use peak, …): trivially
 diffable between commits.
+
+On top of the snapshot, a TRAJECTORY guard: before a section's numbers
+overwrite the previous ``BENCH_engine.json`` entry, :func:`check_trajectory`
+compares the keys in :data:`TRAJECTORY_KEYS` against the previous run and
+flags regressions beyond 10 % (warn by default; ``run.py
+--fail-on-regress`` turns them fatal), and :func:`append_history` appends
+every run's key numbers to ``benchmarks/out/BENCH_history.jsonl`` so the
+full per-run trajectory survives the snapshot's overwrites.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Dict
+import time
+from typing import Dict, List, Tuple
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
 BENCH_PATH = os.path.abspath(
     os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json"))
+HISTORY_PATH = os.path.join(OUT_DIR, "BENCH_history.jsonl")
+
+# the guarded metrics per section: (key, direction, absolute slack).
+# direction "higher" = regression when the new value drops >10 % below the
+# previous run; "lower" = regression when it rises >10 % above.  The slack
+# is an absolute floor below which noise never counts as a regression
+# (overhead percentages jitter a couple of points run to run).
+TRAJECTORY_KEYS: Dict[str, List[Tuple[str, str, float]]] = {
+    "observability_telemetry": [
+        ("paged_tokens_per_s", "higher", 0.0),
+        ("slotted_tokens_per_s", "higher", 0.0),
+        ("paged_vs_slotted_ratio", "higher", 0.0),
+        ("telemetry_overhead_pct", "lower", 2.0),
+        ("plane_overhead_pct", "lower", 2.0),
+    ],
+    "decode_hotpath": [
+        ("tokens_per_s_pipelined", "higher", 0.0),
+        ("pipelined_vs_slotted_ratio", "higher", 0.0),
+    ],
+}
 
 
 def update_bench_json(section: str, payload: Dict) -> str:
@@ -33,3 +62,52 @@ def update_bench_json(section: str, payload: Dict) -> str:
         json.dump(data, f, indent=2, sort_keys=True)
         f.write("\n")
     return BENCH_PATH
+
+
+def previous_section(section: str) -> Dict:
+    """The section's numbers from the current (pre-overwrite)
+    ``BENCH_engine.json`` — call BEFORE :func:`update_bench_json`."""
+    if not os.path.exists(BENCH_PATH):
+        return {}
+    try:
+        with open(BENCH_PATH) as f:
+            return json.load(f).get(section, {}) or {}
+    except (json.JSONDecodeError, OSError):
+        return {}
+
+
+def check_trajectory(section: str, payload: Dict,
+                     tol: float = 0.10) -> List[str]:
+    """Compare ``payload`` against the previous run of ``section``; returns
+    human-readable regression messages (empty = clean).  Only keys listed
+    in :data:`TRAJECTORY_KEYS` are guarded; a key absent from either side
+    is skipped (new metrics don't fail their first run)."""
+    prev = previous_section(section)
+    msgs: List[str] = []
+    for key, direction, slack in TRAJECTORY_KEYS.get(section, []):
+        if key not in prev or key not in payload:
+            continue
+        old, new = float(prev[key]), float(payload[key])
+        if direction == "higher":
+            if old > 0 and new < old * (1.0 - tol) and old - new > slack:
+                msgs.append(f"{section}.{key}: {new:.3f} < {old:.3f} "
+                            f"(-{(1 - new / old) * 100.0:.1f}%)")
+        else:
+            base = max(abs(old), 1e-9)
+            if new > old * (1.0 + tol) and new - old > slack:
+                msgs.append(f"{section}.{key}: {new:.3f} > {old:.3f} "
+                            f"(+{(new - old) / base * 100.0:.1f}%)")
+    return msgs
+
+
+def append_history(section: str, payload: Dict) -> str:
+    """Append one ``{"ts", "section", "metrics"}`` line to the history
+    JSONL — the per-run trajectory the snapshot file overwrites."""
+    os.makedirs(OUT_DIR, exist_ok=True)
+    keys = [k for k, _, _ in TRAJECTORY_KEYS.get(section, [])]
+    metrics = {k: payload[k] for k in keys if k in payload} or payload
+    rec = {"ts": time.strftime("%Y-%m-%dT%H:%M:%S"), "section": section,
+           "metrics": metrics}
+    with open(HISTORY_PATH, "a") as f:
+        f.write(json.dumps(rec, sort_keys=True) + "\n")
+    return HISTORY_PATH

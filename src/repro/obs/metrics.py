@@ -18,7 +18,8 @@ bit-for-bit.
 from __future__ import annotations
 
 import math
-from typing import Dict, Iterable, List, Optional, Set
+from typing import Dict, Iterable, Iterator, List, Mapping, Optional, Set, \
+    Tuple
 
 __all__ = ["CATALOG", "CORE_METRICS", "Counter", "Gauge", "Histogram",
            "MetricsRegistry", "nearest_rank_percentile"]
@@ -141,6 +142,9 @@ CATALOG: Dict[str, str] = {
     "compile_retraces": "counter",  # post-warmup jit shape misses
     "blocks_in_use": "gauge",       # .peak = blocks_peak
     "occupied_rows": "gauge",
+    # phase-level profiling (labeled by ``phase``: prefill_chunk /
+    # decode_dispatch / decode_land / swap_d2h / swap_h2d — see obs.profile)
+    "phase_latency_s": "histogram",
     # session
     "wall_s": "gauge",
 }
@@ -152,34 +156,97 @@ CORE_METRICS = ("requests_submitted", "requests_served", "energy_j",
 
 
 class MetricsRegistry:
-    """Named metrics under one roof; get-or-create with kind checking."""
+    """Named metrics under one roof; get-or-create with kind checking.
 
-    def __init__(self, backend: str = "backend"):
+    ``labels`` are constant labels stamped on the registry itself (e.g. a
+    fleet region's ``{"region": "CA"}`` or an engine session's
+    ``{"kv_layout": "paged"}``) — the exporter merges them into every
+    exposed sample.  :meth:`labeled` fans a CATALOG metric out into child
+    series keyed by label values (``slo_class``, ``phase``, ...); children
+    live in a separate table so :meth:`names` — the cross-backend parity
+    contract — still returns exactly the unlabeled catalog.
+
+    ``streaming=True`` swaps histograms for bounded-memory mergeable
+    :class:`~repro.obs.aggregate.StreamingHistogram` instances (exact
+    below ``max_raw_samples`` observations, log-bucket sketch above) —
+    the 10^6-scale replay / fleet-rollup configuration.
+    """
+
+    def __init__(self, backend: str = "backend",
+                 labels: Optional[Mapping[str, str]] = None,
+                 streaming: bool = False, max_raw_samples: int = 4096,
+                 alpha: float = 0.01):
         self.backend = backend
+        self.labels: Dict[str, str] = dict(labels or {})
+        self.streaming = streaming
+        self.max_raw_samples = max_raw_samples
+        self.alpha = alpha
         self._metrics: Dict[str, object] = {}
+        # (name, ((k, v), ...)) → child metric; kept out of _metrics so
+        # names() stays exactly the catalog
+        self._labeled: Dict[Tuple[str, Tuple[Tuple[str, str], ...]],
+                            object] = {}
 
     @classmethod
-    def standard(cls, backend: str = "backend") -> "MetricsRegistry":
+    def standard(cls, backend: str = "backend",
+                 labels: Optional[Mapping[str, str]] = None,
+                 streaming: bool = False, max_raw_samples: int = 4096,
+                 alpha: float = 0.01) -> "MetricsRegistry":
         """A registry with the whole :data:`CATALOG` pre-registered — the
         constructor every serving backend uses, so metric-name sets are
         identical across backends by construction."""
-        reg = cls(backend)
+        reg = cls(backend, labels=labels, streaming=streaming,
+                  max_raw_samples=max_raw_samples, alpha=alpha)
         for name, kind in CATALOG.items():
             reg._register(name, kind)
         return reg
 
     # --- get-or-create -------------------------------------------------------
+    def _make(self, name: str, kind: str):
+        if kind == "histogram" and self.streaming:
+            from repro.obs.aggregate import StreamingHistogram
+            return StreamingHistogram(name, max_raw=self.max_raw_samples,
+                                      alpha=self.alpha)
+        ctor = {"counter": Counter, "gauge": Gauge,
+                "histogram": Histogram}[kind]
+        return ctor(name)
+
     def _register(self, name: str, kind: str):
         m = self._metrics.get(name)
         if m is not None:
             assert m.kind == kind, \
                 f"metric {name!r} is a {m.kind}, requested as {kind}"
             return m
-        ctor = {"counter": Counter, "gauge": Gauge,
-                "histogram": Histogram}[kind]
-        m = ctor(name)
+        m = self._make(name, kind)
         self._metrics[name] = m
         return m
+
+    def labeled(self, name: str, **labels: str):
+        """Child series of CATALOG metric ``name`` for the given labels
+        (e.g. ``reg.labeled("ttft_s", slo_class="interactive")``).  Same
+        kind as the parent; label keys must come from the canonical schema
+        (:data:`~repro.obs.aggregate.LABEL_KEYS`)."""
+        from repro.obs.aggregate import LABEL_KEYS
+        assert labels, f"labeled({name!r}) called without labels"
+        for k in labels:
+            assert k in LABEL_KEYS, \
+                f"unknown label key {k!r} (schema: {LABEL_KEYS})"
+        parent = self._metrics.get(name)
+        assert parent is not None, f"no CATALOG metric {name!r} registered"
+        key = (name, tuple(sorted((k, str(v)) for k, v in labels.items())))
+        m = self._labeled.get(key)
+        if m is None:
+            m = self._make(name, parent.kind)
+            self._labeled[key] = m
+        return m
+
+    def labeled_series(self, name: Optional[str] = None
+                       ) -> Iterator[Tuple[str, Dict[str, str], object]]:
+        """Yield ``(name, labels, metric)`` for every labeled child
+        (optionally restricted to one metric name), in insertion order."""
+        for (n, lk), m in self._labeled.items():
+            if name is None or n == name:
+                yield n, dict(lk), m
 
     def counter(self, name: str) -> Counter:
         return self._register(name, "counter")

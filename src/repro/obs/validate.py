@@ -13,7 +13,12 @@ every contract the observability layer promises:
   * held requests carry ``held_s`` ≤ their queue delay plus a release
     reason, and un-held requests carry neither;
   * the Chrome-trace export passes the Perfetto schema check and a JSON
-    round-trip (written to a temp file exactly as a user would).
+    round-trip (written to a temp file exactly as a user would);
+  * the OpenMetrics exposition round-trips exactly (export → parse →
+    re-export identical) and its counter samples carry the same values the
+    registry holds;
+  * a fleet rollup over per-region copies conserves energy/carbon
+    bit-exactly and exposes the same labeled family set as one region.
 
 ``scripts/check.sh`` runs this as its trace-schema validation step: it
 needs no jax, no device, and finishes in well under a second.
@@ -29,8 +34,10 @@ import numpy as np
 
 from repro.core import catalog as CAT
 from repro.core import config_graph as CG
-from repro.obs import CarbonFeed, CATALOG, Telemetry, TraceRecorder, \
+from repro.obs import CarbonFeed, CATALOG, FleetRollup, MetricsRegistry, \
+    Telemetry, TraceRecorder, parse_openmetrics, to_openmetrics, \
     validate_chrome_events, validate_trace
+from repro.obs.export import render_families
 from repro.serving import queue as Q
 from repro.serving.api import DEFERRABLE, INTERACTIVE, InferenceRequest
 from repro.serving.policies import CarbonAwarePolicy
@@ -119,10 +126,44 @@ def main() -> int:
             doc = json.load(f)
         n_events = validate_chrome_events(doc["traceEvents"])
 
+    # 7. OpenMetrics exposition round-trip: export → parse → re-export must
+    # be byte-identical, and the counter samples must carry the registry's
+    # exact values (repr round-trip)
+    text = to_openmetrics(tel.registry)
+    families = parse_openmetrics(text)
+    assert render_families(families) == text, \
+        "OpenMetrics round-trip diverged"
+    e_samples = [v for n, lbl, v in families["repro_energy_j"]["samples"]
+                 if n == "repro_energy_j_total" and "region" not in dict(lbl)]
+    assert [float(v) for v in e_samples] == [stats["energy_j"]], \
+        "exposition energy_j != registry energy_j"
+
+    # 8. fleet-rollup conservation: split the session registry into two
+    # synthetic regions and merge — region sums must equal fleet totals
+    # EXACTLY, and the rollup must expose the same family set as a region
+    rollup = FleetRollup()
+    for rname, frac in (("east", 0.25), ("west", 0.75)):
+        reg = MetricsRegistry.standard(rname, labels={"region": rname})
+        reg.counter("energy_j").inc(frac * stats["energy_j"])
+        reg.counter("carbon_g").inc(frac * stats["carbon_g"])
+        reg.counter("requests_served").inc(
+            round(frac * 4) + (0 if rname == "east" else stats["served"] - 4))
+        rollup.add(reg)
+    totals = rollup.conservation(("energy_j", "carbon_g",
+                                  "requests_served"))
+    fleet_families = parse_openmetrics(to_openmetrics(rollup))
+    region_families = parse_openmetrics(
+        to_openmetrics(rollup.regions["east"]))
+    assert set(region_families) <= set(fleet_families), \
+        "fleet exposition missing region families"
+
     print(f"obs.validate OK: {int(stats['served'])} requests, "
           f"{summary['spans']} spans, {n_events} chrome events, "
           f"{len(held)} holds released, "
-          f"energy {stats['energy_j']:.1f} J conserved")
+          f"energy {stats['energy_j']:.1f} J conserved, "
+          f"openmetrics {len(families)} families round-tripped, "
+          f"rollup conserved {totals['energy_j']:.1f} J over "
+          f"{len(rollup.regions)} regions")
     return 0
 
 

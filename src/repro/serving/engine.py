@@ -83,7 +83,7 @@ from repro.core import perf_model as PM
 from repro.core.catalog import Variant
 from repro.models import registry as R
 from repro.models.config import ModelConfig
-from repro.obs import MetricsRegistry, Telemetry, TraceRecorder
+from repro.obs import MetricsRegistry, PhaseProfiler, Telemetry, TraceRecorder
 from repro.serving.api import DONE, InferenceRequest, InferenceResponse, \
     serve_prompts
 from repro.serving.kvpool import BlockAllocator, RadixPrefixCache
@@ -363,9 +363,17 @@ def _note_shape(inst, key: Tuple) -> None:
         inst.retraces += 1
 
 
+# disabled-by-default phase profiler: instances constructed outside a
+# RealEngine observe into this shared no-op (registry=None) shim; the
+# engine overrides ``inst.profiler`` with its own at configure()
+_NULL_PROFILER = PhaseProfiler()
+
+
 class Instance:
     """One serving instance: a slotted batched KV cache plus the variant's
     shared jitted one-pass prefill and batched decode step."""
+
+    profiler: PhaseProfiler = _NULL_PROFILER
 
     def __init__(self, ev: EngineVariant, chips: int, n_slots: int = 4,
                  max_len: int = 96):
@@ -502,12 +510,16 @@ class Instance:
         active = np.array([s is not None for s in self.slots])
         _note_shape(self, ("decode",))
         self.h2d_transfers += 2          # next-token + active-mask uploads
+        t_d0 = time.perf_counter()
         logits, self.cache = self._fns["decode"](
             self.ev.params, self.cache, jnp.asarray(self._next),
             jnp.asarray(active))
         self.host_syncs += 1             # blocking per-step token readback
         self.decode_dispatches += 1
+        t_l0 = time.perf_counter()
         toks = np.asarray(jnp.argmax(logits, axis=-1))
+        self.profiler.observe("decode_dispatch", t_l0 - t_d0)
+        self.profiler.observe("decode_land", time.perf_counter() - t_l0)
         finished: List[_SlotState] = []
         emitted: List[Tuple[int, int]] = []
         for i, s in enumerate(self.slots):
@@ -628,6 +640,8 @@ class PagedInstance:
     lowest-priority / youngest sequence is swapped out to host memory
     (``_SwapState``) for the engine to re-queue and later restore
     bit-exactly."""
+
+    profiler: PhaseProfiler = _NULL_PROFILER
 
     def __init__(self, ev: EngineVariant, chips: int, n_blocks: int,
                  block_size: int = 16, max_seqs: int = 8, max_len: int = 96,
@@ -875,9 +889,11 @@ class PagedInstance:
                 hk = np.pad(hk, pad)
                 hv = np.pad(hv, pad)
             self.h2d_transfers += 3      # index vector + K + V page uploads
+            t_h2d = time.perf_counter()
             self.arena = self._fns["restore_paged"](
                 self.arena, jnp.asarray(idx), jnp.asarray(hk),
                 jnp.asarray(hv))
+            self.profiler.observe("swap_h2d", time.perf_counter() - t_h2d)
         blocks = reused + tail
         self.swapin_pages_total += nb
         self.swapin_pages_copied += n_tail
@@ -933,12 +949,14 @@ class PagedInstance:
         tree_blocks = 0
         if self.prefix is not None:
             tree_blocks = self.prefix.live_prefix_blocks(seq.prompt, limit=nb)
+        t_d2h = time.perf_counter()
         img_k, img_v = self._fns["gather_pages"](self.arena, jnp.asarray(idx))
         for img in (img_k, img_v):
             try:
                 img.copy_to_host_async()
             except AttributeError:       # non-jax array stand-ins in tests
                 pass
+        self.profiler.observe("swap_d2h", time.perf_counter() - t_d2h)
         swap = _SwapState(
             rid=seq.rid, t_arrival=seq.t_arrival, prompt=seq.prompt,
             n_new=seq.n_new, priority=seq.priority, tokens=list(seq.tokens),
@@ -1111,7 +1129,10 @@ class PagedInstance:
             self.host_syncs += 1         # same-tick landing: no overlap
         t0 = time.perf_counter()
         toks = np.asarray(item.toks)     # blocks until the async copy lands
-        self._ld_s += item.dispatch_s + (time.perf_counter() - t0)
+        t_land = time.perf_counter() - t0
+        self._ld_s += item.dispatch_s + t_land
+        self.profiler.observe("decode_dispatch", item.dispatch_s)
+        self.profiler.observe("decode_land", t_land)
         self._ld_steps += item.k
         self._ld_occ = max(self._ld_occ, item.occupied)
         done: List[_PagedSeq] = []
@@ -1449,6 +1470,11 @@ class RealEngine:
         # emits lifecycle spans into its persistent ``tracer``; its ``feed``
         # receives one exact (wall, joules, grams) segment per session
         self.telemetry = telemetry
+        # one engine-owned phase profiler shared by every instance; its
+        # registry is repointed at each session open (and set to None when
+        # no telemetry bundle is attached, so the un-instrumented hot path
+        # stays a single attribute check)
+        self.profiler = PhaseProfiler()
         self.last_registry: Optional[MetricsRegistry] = None
         self._feed_clock = 0.0           # feed-time seconds across sessions
         self._pool: Dict[Tuple[str, int], List[Instance]] = {}
@@ -1496,6 +1522,7 @@ class RealEngine:
                 else:
                     inst = self._new_instance(self.family[vname], chips)
                     inst.warmup()
+                inst.profiler = self.profiler
                 self.instances.append(inst)
         self.last_reconfig_s = time.perf_counter() - t0
         return self.last_reconfig_s
@@ -1507,10 +1534,15 @@ class RealEngine:
         relative to it."""
         assert self.instances, "configure() first"
         if self._session is None:
-            reg = MetricsRegistry.standard(f"real-{self.kv_layout}")
+            reg = MetricsRegistry.standard(f"real-{self.kv_layout}",
+                                           labels={"kv_layout":
+                                                   self.kv_layout})
             tel = self.telemetry
             if tel is not None:
                 tel.registry = reg       # per-session registry (see obs)
+            # phase profiling rides the telemetry opt-in: without a bundle
+            # the profiler stays disabled and the hot path pays nothing
+            self.profiler.registry = reg if tel is not None else None
             self.policy.reset_holds()    # rids repeat across sessions
             self._session = _Session(
                 SchedulerCore(self.policy), self.instances, registry=reg,
@@ -1591,6 +1623,8 @@ class RealEngine:
                         req.on_token(rid, state.tokens[0])   # slotted first
                     if s.tracer is not None:
                         s.tracer.instant("admit", s.rel(t1), rid=rid)
+                if dt > 0:               # slotted layout prefills at admit
+                    self.profiler.observe("prefill_chunk", dt)
                 e_pf = inst.chips * PM.P_BUSY_W * dt   # prefill: busy power
                 s.energy += e_pf
                 s.meters[rid] += e_pf
@@ -1614,6 +1648,7 @@ class RealEngine:
             s.energy += inst.chips * PM.P_BUSY_W * info["prefill_s"]
             for rid, dtc in info["prefill_rids"]:
                 s.meters[rid] += inst.chips * PM.P_BUSY_W * dtc
+                self.profiler.observe("prefill_chunk", dtc)
             if info["decode_steps"]:
                 # info describes LANDED decode work: ``decode_steps`` model
                 # steps (>= 1 per landed dispatch, k per fused dispatch)
@@ -1652,9 +1687,20 @@ class RealEngine:
                         tr.span("decode_tick", cursor, cursor + dt_step,
                                 rids=info["decode_rids"], n=info["occupied"])
                         cursor += dt_step
-                if info["blocks_in_use"]:
-                    tr.counter("blocks_in_use", cursor,
-                               info["blocks_in_use"])
+                # memory/power pressure counter tracks on the engine track
+                # (Perfetto renders them alongside the request spans): the
+                # arena/slot occupancy plus this tick's instantaneous power
+                # draw under the same model that charges the energy
+                if info["decode_steps"]:
+                    p_w = PM.instance_power_w(
+                        inst.chips, info["occupied"] / inst.capacity)
+                elif info["prefill_s"] > 0:
+                    p_w = inst.chips * PM.P_BUSY_W
+                else:
+                    p_w = inst.chips * PM.P_IDLE_W
+                tr.counter("blocks_in_use", cursor, info["blocks_in_use"])
+                tr.counter("occupied_rows", cursor, info["occupied"])
+                tr.counter("power_w", cursor, p_w)
             for rid, tok in info["emitted"]:
                 cb = s.requests[rid].on_token
                 if cb is not None:
@@ -1746,9 +1792,11 @@ class RealEngine:
         reg.counter("requests_served").inc()
         reg.counter("tokens_generated").inc(resp.n_tokens)
         reg.histogram("latency_s").observe(resp.latency_s)
+        reg.labeled("latency_s", slo_class=req.slo).observe(resp.latency_s)
         reg.histogram("queue_delay_s").observe(resp.queue_delay_s)
         if state.t_first is not None:
             reg.histogram("ttft_s").observe(ttft)
+            reg.labeled("ttft_s", slo_class=req.slo).observe(ttft)
         reg.histogram("accuracy").observe(resp.accuracy)
         if not resp.deadline_met:
             reg.counter("deadline_misses").inc()

@@ -404,8 +404,10 @@ class DESBackend:
         reg = self.registry
         reg.counter("requests_served").inc()
         reg.histogram("latency_s").observe(resp.latency_s)
+        reg.labeled("latency_s", slo_class=req.slo).observe(resp.latency_s)
         reg.histogram("queue_delay_s").observe(resp.queue_delay_s)
         reg.histogram("ttft_s").observe(resp.ttft_s)
+        reg.labeled("ttft_s", slo_class=req.slo).observe(resp.ttft_s)
         reg.histogram("accuracy").observe(resp.accuracy)
         if not resp.deadline_met:
             reg.counter("deadline_misses").inc()

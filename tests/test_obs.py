@@ -361,6 +361,92 @@ def test_engine_compile_retrace_counter(family):
 
 
 # =============================================================================
+# engine phase profiling + per-tick counter tracks + exporter parity
+# =============================================================================
+def test_engine_phase_profiling_and_counter_tracks(family, tmp_path):
+    tel = _bundle("real-paged")
+    eng = ENG.RealEngine(family, n_slots=2, max_len=48, kv_layout="paged",
+                         block_size=8, max_seqs=4, n_blocks=20,
+                         ci_g_per_kwh=300.0, telemetry=tel)
+    eng.configure(_graph())
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, CFG.vocab_size, size=6).astype(np.int32)
+               for _ in range(4)]
+    eng._serve_prompts(prompts, n_new=8)
+    reg = eng.last_registry
+    assert reg.labels.get("kv_layout") == "paged"
+    phases = {d["phase"]: h for _, d, h in
+              reg.labeled_series("phase_latency_s")}
+    assert {"prefill_chunk", "decode_dispatch", "decode_land"} <= set(phases)
+    assert all(h.count > 0 and h.sum >= 0.0 for h in phases.values())
+    # per-request slo_class children recorded alongside the parents
+    assert any(d.get("slo_class") for _, d, _ in
+               reg.labeled_series("latency_s"))
+    # the chrome export carries the per-tick counter tracks
+    ct = tmp_path / "t.json"
+    tel.tracer.to_chrome_trace(str(ct))
+    doc = json.loads(ct.read_text())
+    counters = [e for e in doc["traceEvents"] if e["ph"] == "C"]
+    by_name = {}
+    for e in counters:
+        by_name.setdefault(e["name"], []).append(e)
+    assert {"blocks_in_use", "occupied_rows", "power_w"} <= set(by_name)
+    # one sample per engine tick on every track, power always > 0 (the
+    # idle floor), and occupancy actually moved during the session
+    n_ticks = {n: len(v) for n, v in by_name.items()
+               if n in ("blocks_in_use", "occupied_rows", "power_w")}
+    assert len(set(n_ticks.values())) == 1
+    assert all(next(iter(e["args"].values())) > 0.0
+               for e in by_name["power_w"])
+    occ = [next(iter(e["args"].values())) for e in by_name["occupied_rows"]]
+    assert max(occ) > 0.0
+
+
+def test_engine_detached_profiler_records_nothing(family):
+    eng = ENG.RealEngine(family, n_slots=2, max_len=48, kv_layout="paged",
+                         block_size=8, max_seqs=4, n_blocks=20,
+                         ci_g_per_kwh=300.0)          # no telemetry bundle
+    eng.configure(_graph())
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, CFG.vocab_size, size=6).astype(np.int32)
+               for _ in range(2)]
+    eng._serve_prompts(prompts, n_new=4)
+    assert eng.profiler.registry is None
+    assert list(eng.last_registry.labeled_series("phase_latency_s")) == []
+
+
+def test_exporter_family_parity_includes_real_engine(family):
+    from repro.obs import FleetRollup, parse_openmetrics, to_openmetrics
+    from repro.serving.backends import FluidBackend
+
+    def workload():
+        return shaped_request_stream(6, 0.3, vocab_size=CFG.vocab_size,
+                                     shape="peak", prompt_lens=(6, 10),
+                                     n_new=4, seed=2)
+
+    eng = ENG.RealEngine(family, n_slots=2, max_len=32, ci_g_per_kwh=300.0)
+    eng.configure(_graph())
+    serve_workload(eng, workload())
+    des = Q.DESBackend(DES_G, VARIANTS, Q.DESConfig(jitter_sigma=0.0),
+                       ci_g_per_kwh=300.0)
+    serve_workload(des, workload())
+    fluid = FluidBackend(DES_G, VARIANTS, sla_target_s=2.0, window_s=0.25,
+                         ci_g_per_kwh=300.0)
+    serve_workload(fluid, workload())
+
+    regs = {"real": eng.last_registry, "des": des.registry,
+            "fluid": fluid.registry}
+    rollup = FleetRollup()
+    for rname, reg in regs.items():
+        rollup.add(reg, region=rname)
+    sets = {rname: frozenset(parse_openmetrics(to_openmetrics(reg)))
+            for rname, reg in {**regs, "fleet": rollup}.items()}
+    assert len(set(sets.values())) == 1, \
+        {a: sorted(sets[a] ^ sets["fleet"]) for a in sets}
+    rollup.conservation(("energy_j", "carbon_g", "requests_served"))
+
+
+# =============================================================================
 # fleet: per-region feeds stream accountant-exact totals
 # =============================================================================
 def test_fleet_region_feeds_match_accounting():
@@ -375,3 +461,14 @@ def test_fleet_region_feeds_match_accounting():
         assert r.feed_snapshots >= 1, name
         assert r.feed_energy_j == pytest.approx(r.energy_j, rel=1e-9), name
         assert r.feed_carbon_g == pytest.approx(r.carbon_g, rel=1e-9), name
+    # the report ships a fleet rollup whose totals conserve bit-exactly
+    # over the per-region registries and match the region reports
+    assert rep.rollup is not None
+    totals = rep.rollup.conservation(("energy_j", "carbon_g"))
+    assert set(rep.rollup.regions) == set(traces)
+    assert totals["energy_j"] == pytest.approx(
+        sum(r.energy_j for r in rep.regions.values()), rel=1e-12)
+    fleet = rep.rollup.merged()
+    regions_seen = {d["region"] for _, d, _ in fleet.labeled_series()
+                    if "region" in d}
+    assert regions_seen == set(traces)
