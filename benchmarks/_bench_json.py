@@ -45,6 +45,16 @@ TRAJECTORY_KEYS: Dict[str, List[Tuple[str, str, float]]] = {
         ("tokens_per_s_pipelined", "higher", 0.0),
         ("pipelined_vs_slotted_ratio", "higher", 0.0),
     ],
+    "mixed_quality_serving": [
+        ("governed_carbon_g_per_req", "lower", 0.0),
+        ("governed_mean_accuracy", "higher", 0.0),
+    ],
+}
+
+# per-section override of the default 10 % trajectory tolerance: sections
+# whose numbers have proven stable run the guard tighter
+SECTION_TOL: Dict[str, float] = {
+    "decode_hotpath": 0.07,
 }
 
 
@@ -81,8 +91,10 @@ def check_trajectory(section: str, payload: Dict,
     """Compare ``payload`` against the previous run of ``section``; returns
     human-readable regression messages (empty = clean).  Only keys listed
     in :data:`TRAJECTORY_KEYS` are guarded; a key absent from either side
-    is skipped (new metrics don't fail their first run)."""
+    is skipped (new metrics don't fail their first run).  ``tol`` is the
+    default tolerance; :data:`SECTION_TOL` overrides it per section."""
     prev = previous_section(section)
+    tol = SECTION_TOL.get(section, tol)
     msgs: List[str] = []
     for key, direction, slack in TRAJECTORY_KEYS.get(section, []):
         if key not in prev or key not in payload:

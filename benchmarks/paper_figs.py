@@ -303,7 +303,7 @@ def fig15_consolidation(hours=6.0):
     for nb in (N_BLOCKS, 2, 1):
         # BASE shrunk: highest-quality unpartitioned on nb blocks
         gb = CG.ConfigGraph.uniform("efficientnet",
-                                    max(ctx.variants, key=lambda v: v.quality).name,
+                                    CAT.best_variant(ctx.variants).name,
                                     16, nb)
         rb = OBJ.evaluate(gb, ctx.variants, arrival)
         rows.append(("BASE", nb, rb.p95_latency_s / sla,

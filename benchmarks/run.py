@@ -42,6 +42,7 @@ def _benchmarks(fast: bool):
         ("carbon_policy_serving", _carbon_policy_bench),
         ("observability_telemetry", _observability_bench),
         ("decode_hotpath", _decode_hotpath_bench),
+        ("mixed_quality_serving", _mixed_quality_bench),
     ]
     return items
 
@@ -614,6 +615,142 @@ def _decode_hotpath_bench():
             m_pipe["tokens_per_s"] / max(m_slot["tokens_per_s"], 1e-9), 3),
         "greedy_parity_vs_reference": parity,
     }
+    return derived, rows
+
+
+def _mixed_quality_bench():
+    """Carbon/accuracy Pareto sweep of the mixed-quality request path
+    (PR-9 quality selectors, ``serving.quality``).
+
+    One diurnal-trace DES workload (deferrable batch entries + an
+    interactive stream spread over 24 h, fifo policy so per-request
+    quality is the ONLY lever) runs under four operating points:
+
+      * ``off``      — no selector, an all-best pool (``B3 × 2``): today's
+        deployment, the accuracy ceiling and the carbon worst case;
+      * ``static``   — per-class pinning (deferrable → B1) on a mixed
+        ``B1 + B3`` pool of the same total chips;
+      * ``greedy``   — dirty-grid downshifter: deferrable ride B1 whenever
+        the nowcast CI is above the trace mean, B3 when the grid is clean;
+      * ``governed`` — the greedy downshifter behind the accuracy-floor
+        governor (deferrable windowed mean ≥ 0.80, between B1's 0.791 and
+        B3's 0.816 — the floor genuinely binds).
+
+    Emits one (gCO2/request, mean served accuracy) Pareto point per mode.
+    Deterministic gates: every mode meets every deadline at equal
+    interactive attainment, the governed point beats ``off`` on
+    gCO2/request, its per-class windowed accuracy holds the floor, and at
+    least one governed decision actually downshifted (the scenario keeps
+    its teeth).  ``--json`` lands the sweep in BENCH_engine.json, where
+    the trajectory guard watches the governed point.
+    """
+    from repro.core import carbon as CB
+    from repro.core import catalog as CAT
+    from repro.core import config_graph as CG
+    from repro.serving import queue as Q
+    from repro.serving.api import DEFERRABLE, INTERACTIVE, InferenceRequest, \
+        serve_workload
+    from repro.serving.quality import make_selector
+
+    trace = CB.make_trace("CISO-March", hours=72, seed=3)
+    t0 = 24 * 3600.0                   # skip the trace's warm-up day
+    span = 24 * 3600.0
+    dirty = trace.mean()               # the downshifters' threshold
+    variants = CAT.get_family("efficientnet")
+    n_defer, n_inter = 48, 24
+    defer_tokens = 80_000              # ~60 s of B3 busy drain per entry
+
+    def reqs():
+        gap_d, gap_i = span / n_defer, span / n_inter
+        out = [InferenceRequest(rid=i, prompt=[1],
+                                max_new_tokens=defer_tokens,
+                                arrival_s=t0 + gap_d * i, slo=DEFERRABLE,
+                                deadline_s=t0 + gap_d * i + 4 * 3600.0)
+               for i in range(n_defer)]
+        out += [InferenceRequest(rid=n_defer + i, prompt=[1],
+                                 max_new_tokens=8,
+                                 arrival_s=t0 + gap_i * i, slo=INTERACTIVE)
+                for i in range(n_inter)]
+        return out
+
+    floor = 0.80
+    pool_off = CG.ConfigGraph.from_dict("efficientnet", {("B3", 1): 2})
+    pool_mix = CG.ConfigGraph.from_dict("efficientnet",
+                                        {("B1", 1): 1, ("B3", 1): 1})
+    modes = {
+        "off": (pool_off, None),
+        "static": (pool_mix, make_selector(
+            "static", pins={DEFERRABLE: "B1"})),
+        "greedy": (pool_mix, make_selector(
+            "greedy", ci_fn=trace.at, dirty_threshold_g=dirty)),
+        "governed": (pool_mix, make_selector(
+            "governed", ci_fn=trace.at, dirty_threshold_g=dirty,
+            floors={DEFERRABLE: floor})),
+    }
+    inter_target_s = 180.0             # generous: attainment must be equal,
+                                       # not tight — quality is the lever
+    rows = [("mode", "carbon_g_per_req", "mean_accuracy",
+             "deferrable_accuracy", "interactive_accuracy",
+             "interactive_attainment", "deadline_misses")]
+    point = {}
+    for mode, (g, sel) in modes.items():
+        des = Q.DESBackend(g, variants, Q.DESConfig(jitter_sigma=0.0),
+                           policy="fifo", ci_g_per_kwh=trace.at,
+                           quality_selector=sel)
+        responses = serve_workload(des, reqs())
+        m = des.stats()
+        by = {}
+        for r in responses:
+            by.setdefault(r.slo, []).append(r.accuracy)
+        acc = {slo: sum(a) / len(a) for slo, a in by.items()}
+        inter = [r.latency_s for r in responses if r.slo == INTERACTIVE]
+        attain = sum(1 for l in inter if l <= inter_target_s) / len(inter)
+        point[mode] = {
+            "carbon_g_per_req": m["carbon_g_per_req"],
+            "mean_accuracy": m["mean_accuracy"],
+            "deferrable_accuracy": acc[DEFERRABLE],
+            "interactive_accuracy": acc[INTERACTIVE],
+            "interactive_attainment": attain,
+            "deadline_misses": int(m["deadline_misses"]),
+            "downshifts": (sum(1 for _, _, why in sel.decision_sequence()
+                               if why in ("downshift", "pressure"))
+                           if sel is not None else 0),
+        }
+        rows.append((mode, round(m["carbon_g_per_req"], 4),
+                     round(m["mean_accuracy"], 4),
+                     round(acc[DEFERRABLE], 4), round(acc[INTERACTIVE], 4),
+                     round(attain, 4), int(m["deadline_misses"])))
+    gov, off = point["governed"], point["off"]
+    # the gates that keep the sweep honest
+    misses = {m: p["deadline_misses"] for m, p in point.items()}
+    if any(misses.values()):
+        raise RuntimeError(
+            f"deadline misses under the mixed-quality sweep: {misses}")
+    if any(p["interactive_attainment"] < off["interactive_attainment"]
+           for p in point.values()):
+        raise RuntimeError("a selector mode lost interactive attainment vs "
+                           "the no-selector baseline")
+    if gov["carbon_g_per_req"] >= off["carbon_g_per_req"]:
+        raise RuntimeError(
+            f"governed selector failed to cut gCO2/request: "
+            f"{gov['carbon_g_per_req']:.4f} vs off "
+            f"{off['carbon_g_per_req']:.4f}")
+    if gov["deferrable_accuracy"] < floor \
+            or gov["interactive_accuracy"] < floor:
+        raise RuntimeError(f"governed accuracy broke the {floor} floor: "
+                           f"{gov}")
+    if gov["downshifts"] < 1:
+        raise RuntimeError("governed scenario degenerated: no downshift "
+                           "ever happened (the grid never looked dirty)")
+    derived = {f"{mode}_{k}": round(v, 4)
+               for mode, p in point.items() for k, v in p.items()}
+    derived.update({
+        "pareto_points": len(point),
+        "accuracy_floor": floor,
+        "governed_vs_off_saving_pct": round(
+            (1.0 - gov["carbon_g_per_req"] / off["carbon_g_per_req"]) * 100,
+            2),
+    })
     return derived, rows
 
 

@@ -97,6 +97,24 @@ def lm_ladder(arch: str, seq_len: int = 1024, gen_tokens: int = 128) -> List[Var
     return out
 
 
+def _rank(v: Variant) -> tuple:
+    """Total order on a ladder: quality ordinal, then accuracy, then name.
+    The name tie-break makes best/worst deterministic for equal-quality
+    variants regardless of the input ordering (``max`` alone would return
+    whichever duplicate happened to come first)."""
+    return (v.quality, v.accuracy, v.name)
+
+
+def best_variant(variants: Sequence[Variant]) -> Variant:
+    """Highest-quality variant of a ladder (deterministic tie-break)."""
+    return max(variants, key=_rank)
+
+
+def worst_variant(variants: Sequence[Variant]) -> Variant:
+    """Lowest-quality variant of a ladder (deterministic tie-break)."""
+    return min(variants, key=_rank)
+
+
 def get_family(name: str) -> Sequence[Variant]:
     if name in PAPER_FAMILIES:
         return PAPER_FAMILIES[name]

@@ -22,7 +22,7 @@ import random
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core import slices as SL
-from repro.core.catalog import Variant, feasible_slices
+from repro.core.catalog import Variant, best_variant, feasible_slices
 
 Edge = Tuple[str, int]                 # (variant name, slice chips)
 
@@ -215,7 +215,7 @@ def random_config(family: str, variants: Sequence[Variant], n_blocks: int,
     # repair chip count if some slices were dropped for infeasibility
     deficit = n_blocks * SL.BLOCK_CHIPS - g.total_chips
     if deficit > 0:
-        big = max(variants, key=lambda v: v.quality)
+        big = best_variant(variants)
         size = max(s for s in SL.SLICE_SIZES
                    if s <= deficit and SL.fits(big.mem_gb, s))
         w = g.weights()

@@ -21,6 +21,7 @@ import dataclasses
 from typing import Callable, List, Optional, Protocol, Tuple
 
 from repro.core import annealing as SA
+from repro.core import catalog as CAT
 from repro.core import config_graph as CG
 from repro.core import schemes as SCH
 
@@ -184,7 +185,7 @@ class Controller:
                 g = CG.ConfigGraph.from_dict(g.family, w)
         elif delta_blocks > 0:
             if template is None:
-                best = max(self.ctx.variants, key=lambda v: v.quality)
+                best = CAT.best_variant(self.ctx.variants)
                 template = CG.ConfigGraph.uniform(g.family, best.name,
                                                   SL.BLOCK_CHIPS, 1)
             for _ in range(delta_blocks):

@@ -21,7 +21,7 @@ from repro.core import annealing as SA
 from repro.core import config_graph as CG
 from repro.core import objective as OBJ
 from repro.core import slices as SL
-from repro.core.catalog import Variant
+from repro.core.catalog import Variant, best_variant, worst_variant
 
 
 @dataclasses.dataclass
@@ -39,13 +39,13 @@ class SchemeContext:
 
 
 def base_config(ctx: SchemeContext) -> CG.ConfigGraph:
-    best = max(ctx.variants, key=lambda v: v.quality)
+    best = best_variant(ctx.variants)
     return CG.ConfigGraph.uniform(ctx.family, best.name, SL.BLOCK_CHIPS,
                                   ctx.n_blocks)
 
 
 def co2opt_config(ctx: SchemeContext) -> CG.ConfigGraph:
-    small = min(ctx.variants, key=lambda v: v.quality)
+    small = worst_variant(ctx.variants)
     chips = min(s for s in SL.SLICE_SIZES if SL.fits(small.mem_gb, s))
     return CG.ConfigGraph.uniform(ctx.family, small.name, chips, ctx.n_blocks)
 

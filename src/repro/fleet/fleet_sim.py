@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core import annealing as SA
 from repro.core import carbon as CB
+from repro.core import catalog as CAT
 from repro.core import config_graph as CG
 from repro.core import controller as CTRL
 from repro.core import objective as OBJ
@@ -134,6 +135,14 @@ class FleetConfig:
                                               # (gCO2/kWh) for both carbon
                                               # policies
     engine_preemption: bool = False    # paged decode-time swap-out (PR 4)
+    # mixed-quality request path (serving.quality): a per-request variant
+    # selector built over THIS region's forecaster (same nowcast the carbon
+    # policies read) and handed to the probe engine.  None/"off" = route
+    # everything to the engine family's best rung (the pre-PR-9 behavior);
+    # "static" / "greedy" / "governed" select per request at admission
+    engine_quality_selector: Optional[str] = None
+    engine_accuracy_floor: float = 0.0 # "governed": default per-class floor
+                                       # on windowed mean served accuracy
     probe_requests: int = 4            # real requests probed per window
     probe_prompt_len: int = 6
     probe_new_tokens: int = 4
@@ -174,6 +183,10 @@ class RegionReport:
     real_preemptions: int = 0          # paged decode-time swap-outs
     real_reconfig_s: float = 0.0       # total warm-reconfiguration seconds
     real_reconfigs: int = 0
+    # request-weighted mean served accuracy per SLO class (mixed-quality
+    # request path; under the fluid backend both classes sit at the pool
+    # mean — no per-request routing happens there)
+    accuracy_mix: Dict[str, float] = dataclasses.field(default_factory=dict)
     # streaming telemetry (repro.obs.carbon_feed): totals equal the
     # accountant's by construction; snapshots = emitted feed windows
     feed_energy_j: float = 0.0
@@ -289,11 +302,29 @@ class _Region:
                         step_s=cfg.probe_deadline_s / 12.0,
                         ci_threshold=cfg.engine_ci_threshold_g,
                         deadline_margin_s=margin)
+            # mixed-quality request path: the selector reads the SAME
+            # forecaster nowcast as the carbon policies.  If no carbon
+            # policy built a ForecastCIFn, build one anyway (fifo + greedy
+            # selector is a legitimate operating point) — probe_window's
+            # set_epoch re-anchors it per window either way.
+            selector = None
+            if cfg.engine_quality_selector not in (None, "off", "none", ""):
+                from repro.serving import quality as QL
+                if probe_ci_fn is None:
+                    scale = (cfg.engine_policy_horizon_s
+                             / max(cfg.probe_deadline_s, 1e-9))
+                    probe_ci_fn = FC.ForecastCIFn(self.forecaster,
+                                                  time_scale=scale)
+                selector = QL.make_selector(
+                    cfg.engine_quality_selector, ci_fn=probe_ci_fn,
+                    dirty_threshold_g=cfg.engine_ci_threshold_g,
+                    default_floor=cfg.engine_accuracy_floor)
             eng = ENG.RealEngine(engine_family, n_slots=cfg.engine_slots,
                                  max_len=cfg.engine_max_len,
                                  kv_layout=cfg.engine_kv_layout,
                                  policy=policy,
-                                 preemption=cfg.engine_preemption)
+                                 preemption=cfg.engine_preemption,
+                                 quality_selector=selector)
             self.server = BK.RealWindowServer(
                 self.ctx.variants, self.acct, self.ctx.obj_cfg.l_tail_s,
                 engine=eng, probe_requests=cfg.probe_requests,
@@ -553,7 +584,7 @@ def _snapshot(r: _Region, t: float, cfg: FleetConfig) -> RT.RegionSnapshot:
     but before serving in the same window."""
     graph, variants = r.controller.config, r.variants
     if graph.total_chips == 0:
-        best = max(variants, key=lambda v: v.quality)
+        best = CAT.best_variant(variants)
         graph = CG.ConfigGraph.uniform(r.ctx.family, best.name,
                                        SL.BLOCK_CHIPS, 1)
     probe = OBJ.evaluate(graph, variants, 1e-9)
@@ -807,6 +838,16 @@ def run_fleet(family: str, traces: Dict[str, CB.CarbonTrace],
         reg.counter("preemptions").inc(
             getattr(r.server, "real_preemptions", 0))
         reg.histogram("accuracy").observe(r.server.mean_accuracy)
+        # per-class served-accuracy mix: measured per probe response under
+        # the real backend; under the fluid model both classes sit at the
+        # pool mean (no per-request variant routing happens there)
+        mix_fn = getattr(r.server, "accuracy_mix", None)
+        acc_mix = mix_fn() if mix_fn is not None else {}
+        if not acc_mix:
+            acc_mix = {"interactive": r.server.mean_accuracy,
+                       "deferrable": r.server.mean_accuracy}
+        for slo, acc in acc_mix.items():
+            reg.labeled("accuracy", slo_class=slo).observe(acc)
         reg.gauge("wall_s").set(t)
         rollup.add(reg)
         region_reports[r.name] = RegionReport(
@@ -828,6 +869,7 @@ def run_fleet(family: str, traces: Dict[str, CB.CarbonTrace],
             real_preemptions=getattr(r.server, "real_preemptions", 0),
             real_reconfig_s=getattr(r.server, "reconfig_s_total", 0.0),
             real_reconfigs=getattr(r.server, "n_reconfigs", 0),
+            accuracy_mix=acc_mix,
             feed_energy_j=r.feed.energy_j_total,
             feed_carbon_g=r.feed.carbon_g_total,
             feed_snapshots=len(r.feed.snapshots))

@@ -18,7 +18,12 @@ every contract the observability layer promises:
     re-export identical) and its counter samples carry the same values the
     registry holds;
   * a fleet rollup over per-region copies conserves energy/carbon
-    bit-exactly and exposes the same labeled family set as one region.
+    bit-exactly and exposes the same labeled family set as one region;
+  * the mixed-quality request path (``serving.quality``): a governed
+    selector on a two-rung pool downshifts deferrable work on the dirty
+    spell, every response's accuracy/variant matches its decision, the
+    per-class served mean never breaches the configured floor, and
+    per-request joules still sum exactly to the session total.
 
 ``scripts/check.sh`` runs this as its trace-schema validation step: it
 needs no jax, no device, and finishes in well under a second.
@@ -157,13 +162,59 @@ def main() -> int:
     assert set(region_families) <= set(fleet_families), \
         "fleet exposition missing region families"
 
+    # 9. mixed-quality request path: governed selector on a two-rung pool
+    # under the same stepped grid — the dirty first minute must downshift
+    # deferrable work, every served accuracy must equal its decision, the
+    # per-class windowed mean must hold the floor, and attribution must
+    # still conserve
+    from repro.serving.quality import make_selector
+    floor = 0.80
+    sel = make_selector("governed", ci_fn=_ci_step, dirty_threshold_g=100.0,
+                        floors={DEFERRABLE: floor})
+    mixed_g = CG.ConfigGraph.from_dict("efficientnet",
+                                       {("B1", 1): 1, ("B3", 1): 1})
+    mq = Q.DESBackend(mixed_g, CAT.get_family("efficientnet"),
+                      Q.DESConfig(jitter_sigma=0.0), policy="fifo",
+                      ci_g_per_kwh=_ci_step, quality_selector=sel)
+    rng_q = np.random.default_rng(1)
+    for i in range(24):
+        mq.submit(InferenceRequest(
+            rid=i, prompt=rng_q.integers(0, 64, size=6).astype(np.int32),
+            max_new_tokens=8, slo=DEFERRABLE if i % 2 else INTERACTIVE,
+            arrival_s=i * 10.0))
+    mq_responses = mq.drain()
+    mq_stats = mq.stats()
+    dec_of = {d.rid: d for d in sel.decisions}
+    assert len(mq_responses) == 24 and len(dec_of) == 24
+    for r in mq_responses:
+        d = dec_of[r.rid]
+        assert r.variant == d.variant and r.accuracy == d.accuracy, \
+            f"rid {r.rid}: served {r.variant}/{r.accuracy} != decided " \
+            f"{d.variant}/{d.accuracy}"
+    downshifted = [r for r in mq_responses
+                   if dec_of[r.rid].reason == "downshift"]
+    assert downshifted, "dirty spell produced no downshift — degenerated"
+    assert all(r.slo == DEFERRABLE and r.accuracy < sel.best.accuracy
+               for r in downshifted)
+    for slo in (INTERACTIVE, DEFERRABLE):
+        accs = [r.accuracy for r in mq_responses if r.slo == slo]
+        mean = sum(accs) / len(accs)
+        assert mean >= floor - 1e-12, \
+            f"{slo} served mean {mean:.4f} breached the {floor} floor"
+    mq_tol = 1e-9 * max(mq_stats["energy_j"], 1e-12)
+    assert abs(sum(r.energy_j for r in mq_responses)
+               - mq_stats["energy_j"]) <= mq_tol, \
+        "mixed-quality routing broke per-request energy conservation"
+
     print(f"obs.validate OK: {int(stats['served'])} requests, "
           f"{summary['spans']} spans, {n_events} chrome events, "
           f"{len(held)} holds released, "
           f"energy {stats['energy_j']:.1f} J conserved, "
           f"openmetrics {len(families)} families round-tripped, "
           f"rollup conserved {totals['energy_j']:.1f} J over "
-          f"{len(rollup.regions)} regions")
+          f"{len(rollup.regions)} regions, "
+          f"mixed-quality governed {len(downshifted)} downshifts "
+          f"with the {floor} floor held")
     return 0
 
 

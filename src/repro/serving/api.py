@@ -63,7 +63,14 @@ class InferenceRequest:
     deadline on the same clock (only EDF / carbon-aware policies read it).
     ``on_token`` is invoked as ``on_token(rid, token)`` for every generated
     token as the engine emits it — real backends stream, analytic backends
-    (DES / fluid) never call it."""
+    (DES / fluid) never call it.
+
+    Mixed-quality serving (``serving.quality``): ``min_accuracy`` is a hard
+    per-request floor — a quality selector never places the request on a
+    variant whose accuracy proxy falls below it; ``quality_hint`` pins the
+    request to a named ladder rung when that rung is available (the
+    "Greening AI Inference" per-request quality-class API shape).  Both are
+    ignored by a backend running without a selector."""
     rid: int
     prompt: np.ndarray
     max_new_tokens: int = 8
@@ -72,11 +79,14 @@ class InferenceRequest:
     deadline_s: Optional[float] = None
     arrival_s: Optional[float] = None
     on_token: Optional[Callable[[int, int], None]] = None
+    min_accuracy: Optional[float] = None   # hard per-request accuracy floor
+    quality_hint: Optional[str] = None     # pin to a named variant if present
 
     def __post_init__(self) -> None:
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
         assert self.max_new_tokens >= 1, "need at least one generated token"
         assert self.slo in (INTERACTIVE, DEFERRABLE), self.slo
+        assert self.min_accuracy is None or 0.0 <= self.min_accuracy <= 1.0
 
     @property
     def prompt_len(self) -> int:
@@ -106,7 +116,9 @@ class InferenceResponse:
     energy_j: float = 0.0
     carbon_g: float = 0.0
     preemptions: int = 0
-    accuracy: float = 0.0              # serving variant's accuracy proxy
+    accuracy: float = 0.0              # the SERVED variant's accuracy proxy
+    variant: Optional[str] = None      # ladder rung the request actually ran
+                                       # on (None when no selector routed it)
     deadline_s: Optional[float] = None
     held_s: float = 0.0                # policy-hold portion of queue_delay_s
     release_reason: Optional[str] = None   # "valley"/"threshold"/"runway"

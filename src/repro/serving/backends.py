@@ -40,6 +40,7 @@ from repro.obs import MetricsRegistry, Telemetry
 from repro.serving import simulator as SIM
 from repro.serving.api import DEFERRABLE, DONE, INTERACTIVE, \
     InferenceRequest, InferenceResponse, serve_workload
+from repro.serving.quality import make_selector
 from repro.serving.scheduler import latency_percentile
 
 
@@ -91,6 +92,9 @@ class RealWindowServer(SIM.FluidServer):
         self.real_occupancy: List[float] = []
         self.reconfig_s_total = 0.0
         self.n_reconfigs = 0
+        # per-SLO-class served-accuracy accumulators (mixed-quality mix)
+        self.real_acc_sum: Dict[str, float] = {}
+        self.real_acc_n: Dict[str, int] = {}
 
     # --- controller hook -----------------------------------------------------
     def apply_config(self, g: CG.ConfigGraph) -> None:
@@ -132,6 +136,10 @@ class RealWindowServer(SIM.FluidServer):
             self._rid += 1
         responses = serve_workload(self.engine, reqs)
         m = self.engine.stats()
+        for r in responses:
+            self.real_acc_sum[r.slo] = (self.real_acc_sum.get(r.slo, 0.0)
+                                        + r.accuracy)
+            self.real_acc_n[r.slo] = self.real_acc_n.get(r.slo, 0) + 1
         self.real_latencies.extend(self.engine.last_latencies)
         self.real_served += int(m["served"])
         self.real_tokens += int(m["tokens"])
@@ -144,6 +152,12 @@ class RealWindowServer(SIM.FluidServer):
     def real_p95(self) -> float:
         return (latency_percentile(self.real_latencies, 95.0)
                 if self.real_latencies else 0.0)
+
+    def accuracy_mix(self) -> Dict[str, float]:
+        """Request-weighted mean served accuracy per SLO class, over every
+        probe response this server has measured."""
+        return {slo: self.real_acc_sum[slo] / self.real_acc_n[slo]
+                for slo in sorted(self.real_acc_n) if self.real_acc_n[slo]}
 
 
 class FluidBackend:
@@ -162,7 +176,8 @@ class FluidBackend:
     def __init__(self, g: CG.ConfigGraph, variants: Sequence[Variant],
                  sla_target_s: float, trace: Optional[CB.CarbonTrace] = None,
                  window_s: float = 60.0, ci_g_per_kwh: float = 0.0,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 quality_selector=None):
         self.g = g
         self.window_s = window_s
         if trace is None:
@@ -176,6 +191,14 @@ class FluidBackend:
         if telemetry is not None:
             telemetry.registry = self.registry
         self.tracer = telemetry.tracer if telemetry is not None else None
+        # mixed-quality request path: the fluid model serves aggregate
+        # rates, so the selector is a decision + attribution overlay — the
+        # SAME decision sequence as the event-level backends, with each
+        # response carrying its decided rung's name and accuracy
+        self.quality_selector = make_selector(quality_selector)
+        self._dec: Dict[int, tuple] = {}     # rid → (variant, accuracy)
+        if self.quality_selector is not None:
+            self.quality_selector.reset(list(variants))
         self.now = 0.0
         self._pending: Dict[str, List[InferenceRequest]] = {
             INTERACTIVE: [], DEFERRABLE: []}
@@ -188,6 +211,9 @@ class FluidBackend:
     # --- protocol ------------------------------------------------------------
     def submit(self, req: InferenceRequest) -> None:
         self._all.append(req)
+        if self.quality_selector is not None:
+            d = self.quality_selector.select(req)
+            self._dec[req.rid] = (d.variant, d.accuracy)
         self.registry.counter("requests_submitted").inc()
 
     def step(self) -> List[InferenceResponse]:
@@ -217,13 +243,16 @@ class FluidBackend:
             q = self._pending[slo]
             for req in q[:served]:
                 lat = seg.p95_s
+                dec = self._dec.get(req.rid)
                 resp = InferenceResponse(
                     rid=req.rid, tokens=None, slo=req.slo,
                     priority=req.priority, state=DONE,
                     t_arrival=req.arrival_s or 0.0, t_finish=t1,
                     queue_delay_s=max(lat, 0.0), ttft_s=lat, latency_s=lat,
                     energy_j=share_j, carbon_g=share_j / 3.6e6 * ci,
-                    accuracy=seg.res.accuracy, deadline_s=req.deadline_s)
+                    accuracy=dec[1] if dec is not None else seg.res.accuracy,
+                    variant=dec[0] if dec is not None else None,
+                    deadline_s=req.deadline_s)
                 out.append(resp)
                 reg = self.registry
                 reg.counter("requests_served").inc()
@@ -234,6 +263,8 @@ class FluidBackend:
                 reg.histogram("ttft_s").observe(resp.ttft_s)
                 reg.labeled("ttft_s", slo_class=req.slo).observe(resp.ttft_s)
                 reg.histogram("accuracy").observe(resp.accuracy)
+                reg.labeled("accuracy",
+                            slo_class=req.slo).observe(resp.accuracy)
                 if not resp.deadline_met:
                     reg.counter("deadline_misses").inc()
                 if self.tracer is not None:
@@ -269,7 +300,11 @@ class FluidBackend:
         self._stats = {
             "served": int(reg.value("requests_served")),
             "p95_s": self.server.weighted_p95(),
-            "mean_accuracy": self.server.mean_accuracy,
+            # with a selector the served mix defines accuracy (each response
+            # carries its decided rung); without one, the pool mean
+            "mean_accuracy": (reg.histogram("accuracy").mean
+                              if self.quality_selector is not None
+                              else self.server.mean_accuracy),
             # attributed totals: sums of the per-response shares, so the
             # joules-sum / carbon = J × CI contract holds for this backend
             # too.  The accountant's trace total (which also counts windows

@@ -88,6 +88,7 @@ from repro.serving.api import DONE, InferenceRequest, InferenceResponse, \
     serve_prompts
 from repro.serving.kvpool import BlockAllocator, RadixPrefixCache
 from repro.serving.policies import SchedulerPolicy, make_policy
+from repro.serving.quality import make_selector
 from repro.serving.scheduler import SchedulerCore, latency_percentile
 
 __all__ = ["latency_percentile", "EngineVariant", "build_engine_family",
@@ -1373,6 +1374,7 @@ class _Session:
         self.requests: Dict[int, InferenceRequest] = {}
         self.meters: Dict[int, float] = {}
         self.swapped: Dict[int, _SwapState] = {}
+        self.variant_of: Dict[int, str] = {}     # rid → decided ladder rung
         self.admit_gate: Dict[int, Tuple] = {}           # id(inst) → (rid, sig)
         self.admit_t: Dict[int, float] = {}
         self.responses: List[InferenceResponse] = []
@@ -1440,7 +1442,8 @@ class RealEngine:
                  policy: Union[str, SchedulerPolicy, None] = "fifo",
                  preemption: bool = False, ci_g_per_kwh: float = 0.0,
                  telemetry: Optional[Telemetry] = None,
-                 decode_pipeline: bool = True, fused_steps: int = 8):
+                 decode_pipeline: bool = True, fused_steps: int = 8,
+                 quality_selector=None):
         assert kv_layout in ("slotted", "paged"), kv_layout
         assert not (preemption and kv_layout == "slotted"), \
             "preemption requires the paged KV layout (slots never grow)"
@@ -1458,6 +1461,10 @@ class RealEngine:
         self.chunk_blocks = chunk_blocks
         self.prefix_caching = prefix_caching
         self.policy = make_policy(policy)
+        # mixed-quality request path: the selector decides each request's
+        # ladder rung at submit; admission then only places it on instances
+        # of that variant (serving.quality — name, instance, or None)
+        self.quality_selector = make_selector(quality_selector)
         self.preemption = preemption
         # decode hot path: ``decode_pipeline=False`` selects the synchronous
         # reference loop (re-upload + blocking readback every tick) — the
@@ -1550,10 +1557,19 @@ class RealEngine:
             self.last_registry = reg
             self.last_admit_order = []
             self.last_outputs = {}
+            if self.quality_selector is not None:
+                # bind the selector to the rungs this configuration can
+                # actually serve (deduped by name, any instance count)
+                ladder = {inst.ev.variant.name: inst.ev.variant
+                          for inst in self.instances}
+                self.quality_selector.reset(list(ladder.values()))
         s = self._session
         assert req.rid not in s.requests, f"duplicate rid {req.rid}"
         s.requests[req.rid] = req
         s.meters[req.rid] = 0.0
+        if self.quality_selector is not None:
+            dec = self.quality_selector.select(req)
+            s.variant_of[req.rid] = dec.variant
         s.registry.counter("requests_submitted").inc()
         s.schedule(req)
 
@@ -1585,6 +1601,13 @@ class RealEngine:
                 if nxt is None:
                     break
                 rid, t_arr = nxt
+                # mixed-quality routing: the queue head only admits onto
+                # instances of its decided rung (head-of-line blocking on a
+                # variant-busy head is deliberate — identical on the DES).
+                # Also keeps preempted swap images on their own variant.
+                want = s.variant_of.get(rid)
+                if want is not None and inst.ev.variant.name != want:
+                    break
                 sig = inst.admission_signature()
                 if s.admit_gate.get(id(inst)) == (rid, sig):
                     break                # nothing changed since last failure
@@ -1784,7 +1807,8 @@ class RealEngine:
             queue_delay_s=s.admit_t[state.rid] - state.t_arrival,
             ttft_s=ttft, latency_s=t_fin - state.t_arrival,
             energy_j=s.meters[state.rid], preemptions=state.preempts,
-            accuracy=inst.ev.variant.accuracy, deadline_s=req.deadline_s,
+            accuracy=inst.ev.variant.accuracy,
+            variant=inst.ev.variant.name, deadline_s=req.deadline_s,
             held_s=hold[1] - hold[0] if hold is not None else 0.0,
             release_reason=hold[2] if hold is not None else None)
         s.responses.append(resp)
@@ -1798,6 +1822,7 @@ class RealEngine:
             reg.histogram("ttft_s").observe(ttft)
             reg.labeled("ttft_s", slo_class=req.slo).observe(ttft)
         reg.histogram("accuracy").observe(resp.accuracy)
+        reg.labeled("accuracy", slo_class=req.slo).observe(resp.accuracy)
         if not resp.deadline_met:
             reg.counter("deadline_misses").inc()
         if hold is not None:

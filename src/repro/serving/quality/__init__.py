@@ -1,0 +1,30 @@
+"""Mixed-quality request path: per-request variant selection.
+
+Clover's central mechanism — trading a little model quality for a lot of
+operational carbon under an accuracy constraint — existed only at the
+*pool* level (``core/schemes.Clover`` re-mixes instance counts).  This
+subsystem moves the knob onto the request path: a
+:class:`~repro.serving.quality.selectors.QualitySelector` sits between the
+scheduling policy (which decides *when* a request runs) and the engine
+instances (which decide *where*) and picks *at what quality* — a ladder
+rung from ``build_engine_family`` / ``core.catalog`` — for every request
+at admission time.  All three serving backends (``RealEngine`` slotted and
+paged, ``DESBackend``, ``FluidBackend``) honor the same selector contract,
+so one decision sequence replays identically across execution substrates.
+
+Selectors (``make_selector``): ``static`` per-SLO-class pinning, ``greedy``
+dirty-grid downshifting over a ``ci_fn``, and ``governed`` — the greedy
+downshifter behind a windowed per-class accuracy-floor governor that
+refuses downshifts which would breach the configured floor.  This package
+is deliberately jax-free (stdlib only): the DES/fluid paths and
+``scripts/check.sh``'s ``repro.obs.validate`` run it with no device stack.
+"""
+from __future__ import annotations
+
+from repro.serving.quality.selectors import AccuracyFloorGovernor, \
+    GreedyDownshiftSelector, QualityDecision, QualitySelector, \
+    StaticPinSelector, make_selector
+
+__all__ = ["AccuracyFloorGovernor", "GreedyDownshiftSelector",
+           "QualityDecision", "QualitySelector", "StaticPinSelector",
+           "make_selector"]

@@ -39,6 +39,7 @@ from repro.core.catalog import Variant
 from repro.obs import MetricsRegistry, Telemetry
 from repro.serving.api import DONE, InferenceRequest, InferenceResponse
 from repro.serving.policies import SchedulerPolicy, make_policy
+from repro.serving.quality import make_selector
 from repro.serving.scheduler import SchedulerCore, latency_percentile
 
 
@@ -248,7 +249,8 @@ class DESBackend:
                  ci_g_per_kwh: Union[float, Callable[[float], float]] = 0.0,
                  tokens_ref: int = 8,
                  hold_retry_s: float = 60.0,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 quality_selector=None):
         self.g = g
         self.des = des
         self.policy = make_policy(policy)
@@ -274,6 +276,13 @@ class DESBackend:
             for _ in range(w):
                 self._instances.append(
                     _Instance(len(self._instances), v, chips, sp.latency_s))
+        # mixed-quality request path (serving.quality): decisions at submit
+        # on the request's arrival clock, dispatch matches the decided rung
+        self.quality_selector = make_selector(quality_selector)
+        self._variant_of: Dict[int, str] = {}
+        if self.quality_selector is not None:
+            ladder = {i.variant.name: i.variant for i in self._instances}
+            self.quality_selector.reset(list(ladder.values()))
         self.core = SchedulerCore(self.policy)
         self.now = 0.0
         self._heap: List[Tuple[float, int, int, tuple]] = []
@@ -293,6 +302,9 @@ class DESBackend:
         self._reqs[req.rid] = req
         self._meters[req.rid] = 0.0
         self._carbon[req.rid] = 0.0
+        if self.quality_selector is not None:
+            dec = self.quality_selector.select(req)
+            self._variant_of[req.rid] = dec.variant
         self.registry.counter("requests_submitted").inc()
         self._push(req.arrival_s or 0.0, self._ARRIVE, (req.rid,))
 
@@ -366,7 +378,40 @@ class DESBackend:
             base *= math.exp(self._rng.gauss(0.0, self.des.jitter_sigma))
         return base
 
+    def _assign(self, inst: _Instance, rid: int, t_arr: float) -> None:
+        req = self._reqs[rid]
+        svc = self._service_s(inst, req)
+        inst.busy = True
+        inst.current = (rid, t_arr)
+        self._starts[rid] = self.now
+        busy_j = inst.chips * PM.P_BUSY_W * svc
+        self._meters[rid] += busy_j
+        self._carbon[rid] += busy_j / 3.6e6 * self._ci_at(self.now
+                                                          + 0.5 * svc)
+        self._busy_j += busy_j
+        self._push(self.now + svc, self._FINISH, (inst.idx, rid, t_arr))
+
     def _dispatch(self) -> None:
+        if self.quality_selector is not None:
+            # mixed-quality routing: the queue head only runs on instances
+            # of its decided rung; a variant-busy head blocks the line —
+            # the same head-of-line discipline as the real engine's
+            # admission loop, so decision → placement replays identically
+            while True:
+                nxt = self.core.peek_next(self.now)
+                if nxt is None:
+                    break
+                rid, t_arr = nxt
+                want = self._variant_of.get(rid)
+                inst = next(
+                    (i for i in self._instances
+                     if i.alive and not i.busy
+                     and (want is None or i.variant.name == want)), None)
+                if inst is None:
+                    break
+                self.core.pop_next(self.now)
+                self._assign(inst, rid, t_arr)
+            return
         for inst in self._instances:
             if inst.busy or not inst.alive:
                 continue
@@ -374,17 +419,7 @@ class DESBackend:
             if nxt is None:
                 break
             rid, t_arr = nxt
-            req = self._reqs[rid]
-            svc = self._service_s(inst, req)
-            inst.busy = True
-            inst.current = (rid, t_arr)
-            self._starts[rid] = self.now
-            busy_j = inst.chips * PM.P_BUSY_W * svc
-            self._meters[rid] += busy_j
-            self._carbon[rid] += busy_j / 3.6e6 * self._ci_at(self.now
-                                                              + 0.5 * svc)
-            self._busy_j += busy_j
-            self._push(self.now + svc, self._FINISH, (inst.idx, rid, t_arr))
+            self._assign(inst, rid, t_arr)
 
     def _complete(self, rid: int, t_arr: float, inst: _Instance) -> None:
         req = self._reqs[rid]
@@ -396,7 +431,8 @@ class DESBackend:
             state=DONE, t_arrival=t_arr, t_finish=self.now,
             queue_delay_s=start - t_arr, ttft_s=self.now - t_arr,
             latency_s=self.now - t_arr, energy_j=self._meters[rid],
-            accuracy=inst.variant.accuracy, deadline_s=req.deadline_s,
+            accuracy=inst.variant.accuracy, variant=inst.variant.name,
+            deadline_s=req.deadline_s,
             held_s=hold[1] - hold[0] if hold is not None else 0.0,
             release_reason=hold[2] if hold is not None else None)
         self._responses.append(resp)
@@ -409,6 +445,7 @@ class DESBackend:
         reg.histogram("ttft_s").observe(resp.ttft_s)
         reg.labeled("ttft_s", slo_class=req.slo).observe(resp.ttft_s)
         reg.histogram("accuracy").observe(resp.accuracy)
+        reg.labeled("accuracy", slo_class=req.slo).observe(resp.accuracy)
         if not resp.deadline_met:
             reg.counter("deadline_misses").inc()
         if hold is not None:

@@ -1,0 +1,302 @@
+"""Mixed-quality request path (``serving.quality``): selector unit
+behavior (static pinning, greedy dirty-grid downshifting, the windowed
+accuracy-floor governor, per-request hint/floor clamps), the hoisted
+``best_variant``/``worst_variant`` catalog helpers, DES variant routing
+with exact energy attribution, and the cross-backend conformance
+contract — one workload, identical decision sequences on the real engine
+(slotted AND paged), the DES, and the fluid model."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import catalog as CAT
+from repro.core import config_graph as CG
+from repro.serving import engine as ENG
+from repro.serving import queue as Q
+from repro.serving.api import DEFERRABLE, INTERACTIVE, InferenceRequest, \
+    serve_workload
+from repro.serving.backends import FluidBackend
+from repro.serving.quality import AccuracyFloorGovernor, \
+    GreedyDownshiftSelector, QualitySelector, StaticPinSelector, make_selector
+
+CFG = get_smoke_config("qwen3-1.7b").with_(n_layers=2, dtype=jnp.float32)
+VARIANTS = CAT.get_family("efficientnet")
+MIX_G = CG.ConfigGraph.from_dict("efficientnet",
+                                 {("B1", 1): 1, ("B3", 1): 1})
+
+
+@pytest.fixture(scope="module")
+def family():
+    # two real rungs: x0.5 (quality 1, accuracy 0.80) and x1 (quality 2,
+    # accuracy 0.85) — the ladder the routing tests place requests on
+    return ENG.build_engine_family(CFG, fracs=(1.0, 0.5))
+
+
+def _ladder():
+    """The efficientnet rungs the mixed DES pool can instantiate."""
+    by = {v.name: v for v in VARIANTS}
+    return [by["B1"], by["B3"]]          # accuracies 0.791, 0.816
+
+
+def _req(rid, slo=INTERACTIVE, arrival=None, **kw):
+    return InferenceRequest(rid=rid, prompt=[1], max_new_tokens=8, slo=slo,
+                            arrival_s=arrival, **kw)
+
+
+# =============================================================================
+# catalog helpers (satellite bugfix: duplicated max(..., key=quality) hoisted)
+# =============================================================================
+def test_best_worst_variant_and_tie_break():
+    fam = CAT.get_family("efficientnet")
+    assert CAT.best_variant(fam).name == "B7"
+    assert CAT.worst_variant(fam).name == "B1"
+    # equal quality ordinals: accuracy breaks the tie, then name — the
+    # deterministic order every former max(..., key=lambda v: v.quality)
+    # call site now shares (max() alone kept whichever came first)
+    a = CAT.Variant("f", "a", 1, 0.90, 1.0, 1.0, 1.0)
+    b = CAT.Variant("f", "b", 1, 0.95, 1.0, 1.0, 1.0)
+    c = CAT.Variant("f", "c", 1, 0.95, 1.0, 1.0, 1.0)
+    assert CAT.best_variant([a, b]) is b           # accuracy tie-break
+    assert CAT.best_variant([b, a]) is b           # ... order-independent
+    assert CAT.best_variant([c, b]) is c           # name tie-break
+    assert CAT.worst_variant([b, a, c]) is a
+
+
+# =============================================================================
+# selector units
+# =============================================================================
+def test_static_pin_selector_pins_class_and_defaults_rest():
+    sel = StaticPinSelector(pins={DEFERRABLE: "B1"})
+    sel.reset(_ladder())
+    d0 = sel.select(_req(0, DEFERRABLE))
+    d1 = sel.select(_req(1, INTERACTIVE))
+    assert (d0.variant, d0.reason) == ("B1", "pinned")
+    assert (d1.variant, d1.reason) == ("B3", "default")
+    assert sel.decision_sequence() == [(0, "B1", "pinned"),
+                                       (1, "B3", "default")]
+
+
+def test_greedy_downshifts_deferrable_when_dirty_only():
+    sel = GreedyDownshiftSelector(ci_fn=lambda t: 400.0 if t < 60 else 50.0,
+                                  dirty_threshold_g=300.0, sustain_s=30.0)
+    sel.reset(_ladder())
+    assert sel.select(_req(0, DEFERRABLE, 0.0)).reason == "downshift"
+    assert sel.select(_req(1, INTERACTIVE, 10.0)).reason == "default"
+    # sustained dirt (>= 30 s since t=0) drops interactive one rung too
+    d = sel.select(_req(2, INTERACTIVE, 45.0))
+    assert d.reason == "pressure" and d.variant == "B1"
+    # clean grid restores everyone to best (and resets the sustain clock)
+    assert sel.select(_req(3, DEFERRABLE, 90.0)).variant == "B3"
+    assert sel.select(_req(4, INTERACTIVE, 95.0)).reason == "default"
+
+
+def test_governor_refuses_floor_breaching_downshift():
+    ladder = _ladder()                     # B1 0.791 / B3 0.816
+    sel = AccuracyFloorGovernor(
+        base=GreedyDownshiftSelector(ci_fn=lambda t: 400.0),  # always dirty
+        floors={DEFERRABLE: 0.80})
+    sel.reset(ladder)
+    # empty window: a lone B1 would put the mean at 0.791 < 0.80 → refused
+    d0 = sel.select(_req(0, DEFERRABLE, 0.0))
+    assert (d0.variant, d0.reason) == ("B3", "floor")
+    # window now holds 0.816: (0.816 + 0.791) / 2 = 0.8035 ≥ 0.80 → allowed
+    d1 = sel.select(_req(1, DEFERRABLE, 1.0))
+    assert (d1.variant, d1.reason) == ("B1", "downshift")
+    # (0.816 + 0.791 + 0.791) / 3 = 0.799 < 0.80 → refused again
+    d2 = sel.select(_req(2, DEFERRABLE, 2.0))
+    assert (d2.variant, d2.reason) == ("B3", "floor")
+    assert sel.window_mean(DEFERRABLE) >= 0.80
+    # the window prunes: far in the future the refusals start over
+    d3 = sel.select(_req(3, DEFERRABLE, 10 * 3600.0))
+    assert (d3.variant, d3.reason) == ("B3", "floor")
+
+
+def test_per_request_hint_and_min_accuracy_clamp():
+    sel = GreedyDownshiftSelector(ci_fn=lambda t: 400.0)     # always dirty
+    sel.reset(_ladder())
+    # the hint pins even against the downshifter's choice
+    d = sel.select(_req(0, DEFERRABLE, 0.0, quality_hint="B3"))
+    assert (d.variant, d.reason) == ("B3", "hint")
+    # an unknown hint is ignored (the rung isn't instantiable here)
+    assert sel.select(_req(1, DEFERRABLE, 0.0,
+                           quality_hint="B9")).variant == "B1"
+    # min_accuracy is a hard clamp: B1's 0.791 < 0.8 → promoted
+    d = sel.select(_req(2, DEFERRABLE, 0.0, min_accuracy=0.8))
+    assert (d.variant, d.reason) == ("B3", "min_accuracy")
+
+
+def test_make_selector_registry():
+    assert make_selector(None) is None
+    assert make_selector("off") is None
+    sel = make_selector("static", pins={DEFERRABLE: "B1"},
+                        ci_fn=lambda t: 0.0)       # irrelevant kwarg dropped
+    assert isinstance(sel, StaticPinSelector)
+    assert make_selector(sel) is sel               # instance passthrough
+    assert isinstance(make_selector("greedy"), GreedyDownshiftSelector)
+    assert isinstance(make_selector("governed"), AccuracyFloorGovernor)
+    with pytest.raises(ValueError):
+        make_selector("nope")
+    with pytest.raises(NotImplementedError):
+        base = QualitySelector()
+        base.reset(_ladder())
+        base.select(_req(0))
+
+
+# =============================================================================
+# DES routing: decided rung == served rung, attribution still exact
+# =============================================================================
+def test_des_routes_to_decided_variant_and_conserves_energy():
+    sel = make_selector("greedy", ci_fn=lambda t: 400.0 if t < 60 else 50.0,
+                        dirty_threshold_g=300.0)
+    des = Q.DESBackend(MIX_G, VARIANTS, Q.DESConfig(jitter_sigma=0.0),
+                       policy="fifo", ci_g_per_kwh=300.0,
+                       quality_selector=sel)
+    reqs = [_req(i, DEFERRABLE if i % 2 else INTERACTIVE, arrival=i * 10.0)
+            for i in range(12)]
+    responses = serve_workload(des, reqs)
+    m = des.stats()
+    assert m["served"] == len(reqs)
+    dec_of = {d.rid: d for d in sel.decisions}
+    for r in responses:
+        assert r.variant == dec_of[r.rid].variant
+        assert r.accuracy == dec_of[r.rid].accuracy
+    # both rungs genuinely served (dirty spell downshifted deferrable work)
+    assert {r.variant for r in responses} == {"B1", "B3"}
+    # attribution contract survives variant routing: joules sum exactly
+    assert sum(r.energy_j for r in responses) == pytest.approx(
+        m["energy_j"], rel=1e-9)
+    assert sum(r.carbon_g for r in responses) == pytest.approx(
+        m["carbon_g"], rel=1e-9)
+    # satellite: accuracy histogram carries per-class children
+    for slo in (INTERACTIVE, DEFERRABLE):
+        child = des.registry.labeled("accuracy", slo_class=slo)
+        assert child.count == sum(1 for r in responses if r.slo == slo)
+
+
+def test_des_without_selector_unchanged():
+    """selector=None keeps the pre-quality dispatch path bit-identical."""
+    runs = []
+    for sel in (None, None):
+        des = Q.DESBackend(MIX_G, VARIANTS, Q.DESConfig(jitter_sigma=0.0),
+                           policy="fifo", ci_g_per_kwh=300.0,
+                           quality_selector=sel)
+        responses = serve_workload(
+            des, [_req(i, arrival=i * 1.0) for i in range(6)])
+        assert all(r.variant is not None for r in responses)
+        runs.append([(r.rid, r.variant, r.latency_s, r.energy_j)
+                     for r in responses])
+    assert runs[0] == runs[1]
+
+
+# =============================================================================
+# cross-backend conformance: one workload, identical decision sequences
+# =============================================================================
+def _conformance_workload():
+    """Arrival clocks in real wall-able range (< 1 s) so the REAL engine
+    replays the same open-loop schedule the simulators do; the stepped grid
+    is dirty for the first 0.2 s of decision time."""
+    rng = np.random.default_rng(11)
+    reqs = []
+    for i in range(10):
+        kw = {}
+        if i == 6:
+            kw["quality_hint"] = "x0.5"
+        if i == 3:          # dirty window: would downshift without the floor
+            kw["min_accuracy"] = 0.82
+        reqs.append(InferenceRequest(
+            rid=i, prompt=rng.integers(0, CFG.vocab_size, size=4)
+            .astype(np.int32), max_new_tokens=4,
+            slo=DEFERRABLE if i % 2 else INTERACTIVE,
+            arrival_s=i * 0.05, **kw))
+    return reqs
+
+
+def _conformance_selector():
+    return make_selector(
+        "governed", ci_fn=lambda t: 500.0 if t < 0.2 else 50.0,
+        dirty_threshold_g=300.0, sustain_s=0.1, floors={DEFERRABLE: 0.82})
+
+
+def test_decision_sequence_identical_across_all_backends(family):
+    variants = [ev.variant for ev in family]        # x0.5 / x1
+    g = CG.ConfigGraph.from_dict(CFG.name, {("x0.5", 16): 1, ("x1", 16): 1})
+    sequences = {}
+    joules = {}
+
+    for layout in ("slotted", "paged"):
+        sel = _conformance_selector()
+        eng = ENG.RealEngine(family, n_slots=2, max_len=32, kv_layout=layout,
+                             block_size=8, policy="fifo", ci_g_per_kwh=100.0,
+                             quality_selector=sel)
+        eng.configure(g)
+        responses = serve_workload(eng, _conformance_workload())
+        m = eng.stats()
+        assert m["served"] == 10
+        dec_of = {d.rid: d for d in sel.decisions}
+        for r in responses:
+            # the engine ran each request on the instance the decision
+            # named — served variant AND accuracy match the decision
+            assert r.variant == dec_of[r.rid].variant, (layout, r.rid)
+            assert r.accuracy == dec_of[r.rid].accuracy
+        joules[layout] = (sum(r.energy_j for r in responses), m["energy_j"])
+        sequences[layout] = sel.decision_sequence()
+
+    sel = _conformance_selector()
+    des = Q.DESBackend(g, variants, Q.DESConfig(jitter_sigma=0.0),
+                       policy="fifo", ci_g_per_kwh=100.0,
+                       quality_selector=sel)
+    responses = serve_workload(des, _conformance_workload())
+    dec_of = {d.rid: d for d in sel.decisions}
+    for r in responses:
+        assert r.variant == dec_of[r.rid].variant
+    joules["des"] = (sum(r.energy_j for r in responses),
+                     des.stats()["energy_j"])
+    sequences["des"] = sel.decision_sequence()
+
+    sel = _conformance_selector()
+    fb = FluidBackend(g, variants, sla_target_s=1.0, window_s=0.25,
+                      ci_g_per_kwh=100.0, quality_selector=sel)
+    responses = serve_workload(fb, _conformance_workload())
+    assert len(responses) == 10
+    dec_of = {d.rid: d for d in sel.decisions}
+    for r in responses:
+        # the fluid model serves aggregates, but each response still
+        # carries its decided rung (decision → attribution overlay)
+        assert r.variant == dec_of[r.rid].variant
+        assert r.accuracy == dec_of[r.rid].accuracy
+    sequences["fluid"] = sel.decision_sequence()
+
+    # THE contract: one workload, one decision sequence, four backends
+    assert sequences["slotted"] == sequences["paged"] == sequences["des"] \
+        == sequences["fluid"]
+    # the sequence is non-trivial: both rungs appear, and the per-request
+    # clamps fired
+    chosen = {v for _, v, _ in sequences["des"]}
+    reasons = {why for _, _, why in sequences["des"]}
+    assert chosen == {"x0.5", "x1"}
+    assert "hint" in reasons and "min_accuracy" in reasons
+    # per-request joules still sum exactly to each backend's session total
+    for name, (attributed, total) in joules.items():
+        assert attributed == pytest.approx(total, rel=1e-9), name
+
+
+def test_real_engine_labels_accuracy_by_slo_class(family):
+    g = CG.ConfigGraph.from_dict(CFG.name, {("x0.5", 16): 1, ("x1", 16): 1})
+    eng = ENG.RealEngine(family, n_slots=2, max_len=32, policy="fifo",
+                         quality_selector=make_selector(
+                             "static", pins={DEFERRABLE: "x0.5"}))
+    eng.configure(g)
+    rng = np.random.default_rng(13)
+    reqs = [InferenceRequest(
+        rid=i, prompt=rng.integers(0, CFG.vocab_size, size=4)
+        .astype(np.int32), max_new_tokens=4,
+        slo=DEFERRABLE if i % 2 else INTERACTIVE) for i in range(8)]
+    responses = serve_workload(eng, reqs)
+    reg = eng.last_registry
+    for slo in (INTERACTIVE, DEFERRABLE):
+        child = reg.labeled("accuracy", slo_class=slo)
+        assert child.count == sum(1 for r in responses if r.slo == slo)
+    # the pin held: every deferrable response served on the small rung
+    assert all(r.variant == "x0.5" for r in responses if r.slo == DEFERRABLE)
+    assert all(r.variant == "x1" for r in responses if r.slo == INTERACTIVE)
