@@ -49,12 +49,19 @@ TRAJECTORY_KEYS: Dict[str, List[Tuple[str, str, float]]] = {
         ("governed_carbon_g_per_req", "lower", 0.0),
         ("governed_mean_accuracy", "higher", 0.0),
     ],
+    "disagg_serving": [
+        ("token_parity", "higher", 0.0),
+        ("prefill_throughput_ratio", "higher", 0.0),
+        ("tokens_per_s_disagg", "higher", 0.0),
+        ("role_conservation", "higher", 0.0),
+    ],
 }
 
 # per-section override of the default 10 % trajectory tolerance: sections
 # whose numbers have proven stable run the guard tighter
 SECTION_TOL: Dict[str, float] = {
     "decode_hotpath": 0.07,
+    "mixed_quality_serving": 0.07,
 }
 
 

@@ -43,6 +43,7 @@ def _benchmarks(fast: bool):
         ("observability_telemetry", _observability_bench),
         ("decode_hotpath", _decode_hotpath_bench),
         ("mixed_quality_serving", _mixed_quality_bench),
+        ("disagg_serving", _disagg_bench),
     ]
     return items
 
@@ -751,6 +752,34 @@ def _mixed_quality_bench():
             (1.0 - gov["carbon_g_per_req"] / off["carbon_g_per_req"]) * 100,
             2),
     })
+    return derived, rows
+
+
+def _disagg_bench():
+    """Multi-device sharded serving with prefill/decode disaggregation
+    (serving.disagg on a ("data","model") mesh, PR 10).
+
+    The measurement needs 8 host devices, so the body runs in a subprocess
+    (``benchmarks/disagg_serving.py`` sets XLA_FLAGS before jax imports —
+    this harness stays at 1 device) and prints its numbers as one JSON
+    line.  The subprocess enforces the hard gates itself (token parity of
+    disagg vs monolithic on the sharded mesh, exact per-role joules/carbon
+    conservation, prefill-pool throughput ≥ the monolithic engine's at
+    equal chips); a gate failure is a nonzero exit surfaced here."""
+    import subprocess
+
+    script = os.path.join(os.path.dirname(__file__), "disagg_serving.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")) \
+        + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, script], capture_output=True,
+                         text=True, timeout=1800, env=env)
+    if out.returncode != 0:
+        raise RuntimeError(f"disagg bench failed:\n{out.stdout[-2000:]}\n"
+                           f"{out.stderr[-2000:]}")
+    derived = json.loads(out.stdout.strip().splitlines()[-1])
+    rows = [("metric", "value")] + sorted(derived.items())
     return derived, rows
 
 

@@ -22,6 +22,11 @@ python -m compileall -q src benchmarks examples tests scripts
 # OpenMetrics exposition that round-trips byte-identically with exact
 # counter values, and a fleet rollup conserving energy/carbon bit-exactly
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.obs.validate
+# 8-device disaggregated-serving smoke: sharded prefill/decode workers on
+# a forced host-device mesh hand off every sequence and conserve the
+# per-role joules split (subprocess sets XLA_FLAGS itself; tier-1 fast)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python tests/multidev_scenarios.py \
+    disagg_smoke
 # belt to the grep's braces: DeprecationWarnings attributed to repro
 # modules (stacklevel=1, or third-party deprecations triggered from repro
 # frames) are errors too

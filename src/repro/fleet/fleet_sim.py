@@ -135,6 +135,14 @@ class FleetConfig:
                                               # (gCO2/kWh) for both carbon
                                               # policies
     engine_preemption: bool = False    # paged decode-time swap-out (PR 4)
+    # per-region disaggregated worker topology (serving.disagg): region →
+    # (prefill_workers, decode_workers).  A region in the map builds a
+    # DisaggEngine via RealEngine(roles=...) — requires the paged KV layout
+    # (block handoff); regions not in the map stay monolithic, so the same
+    # fleet can mix split and unsplit serving.  probe_window and the
+    # controller's warm reconfigure path are unchanged: the disagg engine
+    # serves the identical ServingBackend protocol.
+    engine_topology: Optional[Dict[str, Tuple[int, int]]] = None
     # mixed-quality request path (serving.quality): a per-request variant
     # selector built over THIS region's forecaster (same nowcast the carbon
     # policies read) and handed to the probe engine.  None/"off" = route
@@ -319,12 +327,22 @@ class _Region:
                     cfg.engine_quality_selector, ci_fn=probe_ci_fn,
                     dirty_threshold_g=cfg.engine_ci_threshold_g,
                     default_floor=cfg.engine_accuracy_floor)
+            # disaggregated regions: RealEngine(roles=...) transparently
+            # builds a DisaggEngine (prefill/decode worker split) behind
+            # the same protocol — requires the paged arena for handoff
+            roles = (cfg.engine_topology or {}).get(self.name)
+            if roles is not None:
+                assert cfg.engine_kv_layout == "paged", \
+                    f"engine_topology[{self.name!r}] needs " \
+                    f"engine_kv_layout='paged' (block handoff), got " \
+                    f"{cfg.engine_kv_layout!r}"
             eng = ENG.RealEngine(engine_family, n_slots=cfg.engine_slots,
                                  max_len=cfg.engine_max_len,
                                  kv_layout=cfg.engine_kv_layout,
                                  policy=policy,
                                  preemption=cfg.engine_preemption,
-                                 quality_selector=selector)
+                                 quality_selector=selector,
+                                 roles=roles)
             self.server = BK.RealWindowServer(
                 self.ctx.variants, self.acct, self.ctx.obj_cfg.l_tail_s,
                 engine=eng, probe_requests=cfg.probe_requests,

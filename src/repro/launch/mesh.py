@@ -24,10 +24,30 @@ TPU_XLA_PERF_FLAGS = (
 )
 
 
+def make_mesh_for(n_devices: int | None = None,
+                  model_parallel: int | None = None):
+    """Size a ("data", "model") serving mesh to the devices that exist.
+
+    The production factory below hard-codes the 16×16 pod shape and can only
+    run on that topology; everything else — engines, tests, the host-platform
+    smoke — goes through this so the device count is discovered, not assumed.
+
+      n_devices       total devices to use (default: all visible devices)
+      model_parallel  size of the "model" axis (default: all of them — pure
+                      tensor parallelism; must divide n_devices)
+    """
+    n = int(n_devices) if n_devices else len(jax.devices())
+    m = int(model_parallel) if model_parallel else n
+    if m <= 0 or n % m != 0:
+        raise ValueError(
+            f"model_parallel={m} does not divide n_devices={n}")
+    return jax.make_mesh((n // m, m), ("data", "model"))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    if multi_pod:
+        return jax.make_mesh((2, 16, 16), ("pod", "data", "model"))
+    return make_mesh_for(256, model_parallel=16)
 
 
 def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):

@@ -96,10 +96,23 @@ def supports_paged(cfg: ModelConfig) -> bool:
 
 
 def make_block_arena(cfg: ModelConfig, n_blocks: int, block_size: int,
-                     dtype=jnp.bfloat16) -> Params:
+                     dtype=jnp.bfloat16, mesh=None) -> Params:
     """Paged KV arena (block 0 = junk sink); ``serving.kvpool`` owns the
-    free-list / refcount / block-table map of it."""
-    return T.init_block_arena(cfg, n_blocks, block_size, dtype)
+    free-list / refcount / block-table map of it.  ``mesh`` commits the
+    arena under the GSPMD arena rule (KV heads → "model")."""
+    return T.init_block_arena(cfg, n_blocks, block_size, dtype, mesh=mesh)
+
+
+def shard_params(params: Params, cfg: ModelConfig, mesh) -> Params:
+    """Mesh-aware entry point: place a params tree under the GSPMD rules
+    (``sharding.rules.spec_for_param`` — Megatron column→row pairs, head
+    guards, expert parallelism).  Host/replicated trees come back committed;
+    jitted model fns called on the result specialize to the sharded layout."""
+    import jax
+    from repro.sharding import rules as SR
+    shardings = SR.param_shardings(
+        jax.eval_shape(lambda: params), cfg, mesh)
+    return jax.device_put(params, shardings)
 
 
 def prefill_paged(params: Params, batch: dict, cfg: ModelConfig,

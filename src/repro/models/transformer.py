@@ -494,17 +494,26 @@ def decode_slots_lm(params: Params, cache: Params, tokens: jnp.ndarray,
 # paged KV arena (kvpool serving engine)
 # =============================================================================
 def init_block_arena(cfg: ModelConfig, n_blocks: int, block_size: int,
-                     dtype=jnp.bfloat16) -> Params:
+                     dtype=jnp.bfloat16, mesh=None) -> Params:
     """Paged KV arena: every sequence's cache is a list of fixed-size blocks
     carved from this one allocation (``serving.kvpool`` owns the map: free
     list, refcounts, block tables).  Block 0 is the junk sink for masked
-    writes — it is never handed to a sequence."""
+    writes — it is never handed to a sequence.
+
+    With ``mesh`` the arena comes back committed under the GSPMD rule
+    (KV heads over "model", block dims unsharded — ``sharding.rules.
+    arena_spec``) so the serving engine's donated prefill/decode jits
+    specialize to the sharded layout."""
     assert supports_slots(cfg), f"paged arena unsupported for {cfg.family}"
     K, dh = cfg.n_kv_heads, cfg.d_head
-    return {
-        "k": jnp.zeros((cfg.n_layers, n_blocks, block_size, K, dh), dtype),
-        "v": jnp.zeros((cfg.n_layers, n_blocks, block_size, K, dh), dtype),
-    }
+    shape = (cfg.n_layers, n_blocks, block_size, K, dh)
+    if mesh is None:
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    import jax
+    from repro.sharding import rules as SR
+    sh = SR.arena_shardings(mesh, cfg)
+    zeros = jax.jit(lambda: jnp.zeros(shape, dtype), out_shardings=sh)
+    return {"k": zeros(), "v": zeros()}
 
 
 def prefill_paged_lm(params: Params, tokens: jnp.ndarray, cfg: ModelConfig,

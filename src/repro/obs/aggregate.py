@@ -42,7 +42,7 @@ __all__ = ["LABEL_KEYS", "StreamingHistogram", "FleetRollup",
 # the canonical label schema: every labeled child series and every
 # registry-level constant label uses keys from this set, so exposition and
 # rollup never have to reconcile ad-hoc label vocabularies
-LABEL_KEYS = ("region", "slo_class", "kv_layout", "phase")
+LABEL_KEYS = ("region", "slo_class", "kv_layout", "phase", "role")
 
 
 class StreamingHistogram(Histogram):

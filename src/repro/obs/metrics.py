@@ -139,6 +139,11 @@ CATALOG: Dict[str, str] = {
     "prefix_hit_tokens": "counter",
     "swapin_pages_copied": "counter",
     "swapin_pages_saved": "counter",
+    # prefill→decode disaggregation (serving.disagg): sequences handed off
+    # and the filled KV pages that moved with them (zero on monolithic and
+    # analytic backends — the names still exist)
+    "handoffs": "counter",
+    "handoff_pages": "counter",
     "compile_retraces": "counter",  # post-warmup jit shape misses
     "blocks_in_use": "gauge",       # .peak = blocks_peak
     "occupied_rows": "gauge",

@@ -43,19 +43,30 @@ PHASES = ("prefill_chunk", "decode_dispatch", "decode_land",
 
 class PhaseProfiler:
     """Routes phase timings into a (swappable) registry's labeled
-    ``phase_latency_s`` histogram.  ``registry=None`` disables it."""
+    ``phase_latency_s`` histogram.  ``registry=None`` disables it.
 
-    __slots__ = ("registry",)
+    ``role`` (disaggregated serving) adds a constant ``role`` label to
+    every sample — a disagg engine owns one profiler per worker pool, so
+    phase latency splits prefill-pool vs decode-pool without any change
+    to the engine's observe call sites."""
 
-    def __init__(self, registry: Optional[MetricsRegistry] = None):
+    __slots__ = ("registry", "role")
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None,
+                 role: Optional[str] = None):
         self.registry = registry
+        self.role = role
 
     def observe(self, phase: str, seconds: float) -> None:
         reg = self.registry
         if reg is None:
             return
         assert phase in PHASES, f"unknown phase {phase!r}"
-        reg.labeled("phase_latency_s", phase=phase).observe(seconds)
+        if self.role is None:
+            reg.labeled("phase_latency_s", phase=phase).observe(seconds)
+        else:
+            reg.labeled("phase_latency_s", phase=phase,
+                        role=self.role).observe(seconds)
 
     @contextmanager
     def span(self, phase: str):

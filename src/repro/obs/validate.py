@@ -23,7 +23,15 @@ every contract the observability layer promises:
     selector on a two-rung pool downshifts deferrable work on the dirty
     spell, every response's accuracy/variant matches its decision, the
     per-class served mean never breaches the configured floor, and
-    per-request joules still sum exactly to the session total.
+    per-request joules still sum exactly to the session total;
+  * disaggregated-serving conservation
+    (:func:`check_disagg_conservation`): the per-role joules split a
+    serving engine reports (``prefill_energy_j`` + ``decode_energy_j`` +
+    ``handoff_energy_j`` + ``both_energy_j``) sums exactly to its
+    ``energy_j`` session total — exercised here on synthetic stats dicts
+    (both the disagg and the monolithic shape, plus a violated one that
+    must be caught), and on real engine stats by ``tests/test_disagg.py``
+    and the ``disagg_serving`` bench stage.
 
 ``scripts/check.sh`` runs this as its trace-schema validation step: it
 needs no jax, no device, and finishes in well under a second.
@@ -46,6 +54,29 @@ from repro.obs.export import render_families
 from repro.serving import queue as Q
 from repro.serving.api import DEFERRABLE, INTERACTIVE, InferenceRequest
 from repro.serving.policies import CarbonAwarePolicy
+
+
+ROLE_ENERGY_KEYS = ("prefill_energy_j", "decode_energy_j",
+                    "handoff_energy_j", "both_energy_j")
+
+
+def check_disagg_conservation(stats, rel_tol: float = 1e-9) -> float:
+    """Assert the per-role joules split conserves against the session total.
+
+    ``stats`` is any serving backend's ``stats()`` dict carrying the
+    :data:`ROLE_ENERGY_KEYS` (monolithic engines put the whole total under
+    ``both_energy_j``; disaggregated engines split it across prefill /
+    decode / handoff).  The roles partition every charged joule by
+    construction, so the check is exact up to float accumulation
+    (``rel_tol`` of the total, the repo-wide conservation tolerance).
+    Returns the session ``energy_j`` for convenience."""
+    total = float(stats["energy_j"])
+    by_role = sum(float(stats.get(k, 0.0)) for k in ROLE_ENERGY_KEYS)
+    tol = rel_tol * max(total, 1e-12)
+    assert abs(by_role - total) <= tol, \
+        f"role energy split {by_role!r} J != session total {total!r} J " \
+        f"(prefill+decode+handoff+both must conserve exactly)"
+    return total
 
 
 def _ci_step(t: float) -> float:
@@ -206,6 +237,24 @@ def main() -> int:
                - mq_stats["energy_j"]) <= mq_tol, \
         "mixed-quality routing broke per-request energy conservation"
 
+    # 10. disagg role-split conservation: the checker itself must accept
+    # both stats shapes (disagg split / monolithic "both") and reject a
+    # violated split — the real-engine stats are pinned by tests/test_disagg
+    # and the disagg_serving bench through this same function
+    check_disagg_conservation({
+        "energy_j": 10.0, "prefill_energy_j": 6.0, "decode_energy_j": 3.5,
+        "handoff_energy_j": 0.5, "both_energy_j": 0.0})
+    check_disagg_conservation({"energy_j": stats["energy_j"],
+                               "both_energy_j": stats["energy_j"]})
+    try:
+        check_disagg_conservation({"energy_j": 10.0,
+                                   "prefill_energy_j": 6.0})
+    except AssertionError:
+        pass
+    else:
+        raise AssertionError("check_disagg_conservation accepted a "
+                             "non-conserving role split")
+
     print(f"obs.validate OK: {int(stats['served'])} requests, "
           f"{summary['spans']} spans, {n_events} chrome events, "
           f"{len(held)} holds released, "
@@ -214,7 +263,8 @@ def main() -> int:
           f"rollup conserved {totals['energy_j']:.1f} J over "
           f"{len(rollup.regions)} regions, "
           f"mixed-quality governed {len(downshifted)} downshifts "
-          f"with the {floor} floor held")
+          f"with the {floor} floor held, "
+          f"disagg role-split conservation enforced")
     return 0
 
 

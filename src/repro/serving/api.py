@@ -122,6 +122,11 @@ class InferenceResponse:
     deadline_s: Optional[float] = None
     held_s: float = 0.0                # policy-hold portion of queue_delay_s
     release_reason: Optional[str] = None   # "valley"/"threshold"/"runway"
+    # role-split joules (serving.disagg): {"prefill": J, "decode": J,
+    # "handoff": J} on a disaggregated engine ({"both": J} monolithic);
+    # values sum to energy_j, so per-phase carbon is per-request too
+    energy_by_role: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def n_tokens(self) -> int:

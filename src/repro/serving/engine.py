@@ -184,6 +184,17 @@ def _paged_fns(ev: EngineVariant) -> dict:
     return ev.fns
 
 
+def _sharded_params(ev: EngineVariant, mesh) -> dict:
+    """Mesh-sharded copy of a variant's params, cached on the EngineVariant
+    per mesh (same sharing discipline as the jitted fns: every instance of
+    the variant on the same mesh reuses one device_put, so warm
+    reconfiguration never re-places weights)."""
+    key = ("sharded_params", id(mesh))
+    if key not in ev.fns:
+        ev.fns[key] = R.shard_params(ev.params, ev.cfg, mesh)
+    return ev.fns[key]
+
+
 def _bucket(n: int) -> int:
     """Prompt padding bucket (next power of two, floor 8) so prefill jit
     specialisations stay bounded as prompt lengths vary."""
@@ -375,6 +386,7 @@ class Instance:
     shared jitted one-pass prefill and batched decode step."""
 
     profiler: PhaseProfiler = _NULL_PROFILER
+    role: str = "both"                   # slotted instances never split
 
     def __init__(self, ev: EngineVariant, chips: int, n_slots: int = 4,
                  max_len: int = 96):
@@ -640,7 +652,23 @@ class PagedInstance:
     sequence's table on demand; when the arena runs dry mid-decode the
     lowest-priority / youngest sequence is swapped out to host memory
     (``_SwapState``) for the engine to re-queue and later restore
-    bit-exactly."""
+    bit-exactly.
+
+    With ``mesh`` the instance is SHARDED: params are placed under the
+    GSPMD rules (tensor-parallel attention/MLP over "model"), the arena is
+    committed with KV heads over "model" (``sharding.rules.arena_spec`` —
+    an explicit error for non-divisible head counts), and uploaded loop
+    buffers shard their row dim over "data" when divisible.  Block tables
+    and the allocator stay host-side; the pipelined loop, fused dispatch
+    and donation discipline are unchanged — jit just specializes to the
+    sharded layouts.
+
+    ``role`` splits the serving loop for disaggregation (``serving.
+    disagg``): a ``"prefill"`` worker runs chunked prefill only (its tick
+    never dispatches decode, admission reserves prompt blocks only) and
+    fully-prefilled sequences are extracted via :meth:`handoff_out`; a
+    ``"decode"`` worker receives them through ``resume``.  The default
+    ``"both"`` is the monolithic engine."""
 
     profiler: PhaseProfiler = _NULL_PROFILER
 
@@ -650,9 +678,13 @@ class PagedInstance:
                  cache_watermark: float = 0.25, chunk_burst: int = 4,
                  preemption: bool = False,
                  policy: Optional[SchedulerPolicy] = None,
-                 pipeline: bool = True, fused_steps: int = 8):
+                 pipeline: bool = True, fused_steps: int = 8,
+                 mesh=None, role: str = "both"):
+        assert role in ("both", "prefill", "decode"), role
         self.ev = ev
         self.chips = chips
+        self.mesh = mesh
+        self.role = role
         self.block_size = block_size
         self.max_len = max_len
         self.max_seqs = max_seqs
@@ -670,8 +702,12 @@ class PagedInstance:
         # prefill queue (None / is_fifo → admission-order, the old behavior)
         self.policy = policy
         self._fns = _paged_fns(ev)
+        # sharded instances run the SAME jitted fns — computation follows
+        # the committed params/arena, specializing per sharding layout
+        self.params = (ev.params if mesh is None
+                       else _sharded_params(ev, mesh))
         self.arena = R.make_block_arena(ev.cfg, n_blocks, block_size,
-                                        dtype=jnp.float32)
+                                        dtype=jnp.float32, mesh=mesh)
         self.alloc = BlockAllocator(n_blocks, block_size)
         self.prefix: Optional[RadixPrefixCache] = (
             RadixPrefixCache(self.alloc) if prefix_caching else None)
@@ -684,6 +720,10 @@ class PagedInstance:
         self.prefill_chunks = 0
         self.prefix_hit_tokens = 0
         self.preemptions = 0
+        # disaggregation traffic (lifetime; session deltas): sequences this
+        # worker staged out for a decode worker, and the pages that moved
+        self.handoffs_out = 0
+        self.handoff_pages = 0
         # swap-in page accounting: ``total`` counts the pages a FULL restore
         # would have written back, ``copied`` the pages actually written —
         # the gap is what the radix tree's surviving blocks saved
@@ -740,6 +780,19 @@ class PagedInstance:
         self._dev_active = None
         self._dirty = True
 
+    def _put_rows(self, arr: np.ndarray):
+        """Upload one (B, ...) loop-state buffer.  Under a mesh the leading
+        row dim shards over "data" when divisible (replicated otherwise) so
+        the decode batch splits across data-parallel devices; without a mesh
+        this is a plain ``jnp.asarray`` (the PR 7 behavior, bit-identical)."""
+        if self.mesh is None:
+            return jnp.asarray(arr)
+        from jax.sharding import NamedSharding, PartitionSpec
+        nd = self.mesh.shape.get("data", 1)
+        ax = "data" if nd > 1 and arr.shape[0] % nd == 0 else None
+        spec = PartitionSpec(ax, *([None] * (arr.ndim - 1)))
+        return jax.device_put(arr, NamedSharding(self.mesh, spec))
+
     def warmup(self) -> None:
         """Compile every shape the serve loop can reach: the (single)
         fixed-size prefill chunk plus, per power-of-two row bucket
@@ -752,7 +805,7 @@ class PagedInstance:
         for span in self._page_buckets():
             self._shapes.add(("prefill_paged", span))
             lg, self.arena = self._fns["prefill_paged"](
-                self.ev.params, dummy, self.arena,
+                self.params, dummy, self.arena,
                 jnp.zeros((span,), jnp.int32), 0, 0)
             lg.block_until_ready()
         ks = sorted({1, self.fused_steps})
@@ -760,10 +813,10 @@ class PagedInstance:
             for k in ks:
                 self._shapes.add(("decode_multi", B, k))
                 toks, self.arena, _, _ = self._fns["decode_multi"](
-                    self.ev.params, self.arena, jnp.asarray(self._next[:B]),
-                    jnp.asarray(self.tables[:B]),
-                    jnp.asarray(self.lengths[:B]), jnp.zeros((B,), bool),
-                    k=k)
+                    self.params, self.arena, self._put_rows(self._next[:B]),
+                    self._put_rows(self.tables[:B]),
+                    self._put_rows(self.lengths[:B]),
+                    self._put_rows(np.zeros((B,), bool)), k=k)
                 toks.block_until_ready()
 
     # --- capacity ------------------------------------------------------------
@@ -800,7 +853,10 @@ class PagedInstance:
         pressure is resolved by swapping victims out."""
         assert prompt_len + n_new <= self.max_len, \
             f"prompt {prompt_len} + n_new {n_new} > max_len {self.max_len}"
-        reserve = prompt_len if self.preemption else prompt_len + n_new
+        # a prefill worker never decodes here: only the prompt's blocks are
+        # ever written before handoff, so that is all admission reserves
+        reserve = (prompt_len if self.preemption or self.role == "prefill"
+                   else prompt_len + n_new)
         need = self.alloc.blocks_for_tokens(reserve)
         assert need <= self.alloc.num_allocatable, \
             f"request needs {need} blocks > arena {self.alloc.num_allocatable}"
@@ -824,7 +880,8 @@ class PagedInstance:
         n_cached = 0
         if self.prefix is not None:
             matched, n_cached = self.prefix.match(prompt)
-        reserve = true_len if self.preemption else true_len + n_new
+        reserve = (true_len if self.preemption or self.role == "prefill"
+                   else true_len + n_new)
         need = self.alloc.blocks_for_tokens(reserve) - len(matched)
         if need > self.alloc.num_free and self.prefix is not None:
             self.prefix.evict(need - self.alloc.num_free)
@@ -941,7 +998,30 @@ class PagedInstance:
         overlaps the decode ticks between swap-out and resume instead of
         blocking the loop here.  Any in-flight decode work is landed first
         (the image must contain the sequence's true tokens/lengths)."""
-        self._flush_all()                # pending tokens become part of image
+        return self._stage_out(seq, count_preempt=True)
+
+    def handoff_out(self, seq: _PagedSeq) -> _SwapState:
+        """Stage a FULLY-PREFILLED sequence out for prefill→decode handoff
+        (``serving.disagg``): same staged page gather + row/block release
+        as a swap-out, but it is a planned transfer, not a preemption — the
+        sequence's ``preempts`` count and this instance's ``preemptions``
+        counter stay untouched; ``handoffs_out``/``handoff_pages`` record
+        the traffic instead.  Only the sequence's own pending first token
+        is landed (there are no in-flight decodes on a prefill worker), so
+        extracting one handoff never force-flushes its neighbours."""
+        assert seq.prefilled and seq.pending_first is None, \
+            f"handoff of rid {seq.rid} before its first token landed"
+        swap = self._stage_out(seq, count_preempt=False)
+        self.handoffs_out += 1
+        self.handoff_pages += swap.nb
+        return swap
+
+    def _stage_out(self, seq: _PagedSeq, *,
+                   count_preempt: bool) -> _SwapState:
+        if count_preempt:
+            self._flush_all()            # pending tokens become part of image
+        elif seq.pending_first is not None:
+            self._land_first(seq.pending_first)
         n_ctx = int(self.lengths[seq.row])
         nb = self.alloc.blocks_for_tokens(max(n_ctx, 1))
         pb = _pow2_bucket(nb, self.n_pages)
@@ -963,12 +1043,14 @@ class PagedInstance:
             n_new=seq.n_new, priority=seq.priority, tokens=list(seq.tokens),
             remaining=seq.remaining, n_ctx=n_ctx,
             next_token=int(self._next[seq.row, 0]), t_first=seq.t_first,
-            cached_tokens=seq.cached_tokens, preempts=seq.preempts + 1,
+            cached_tokens=seq.cached_tokens,
+            preempts=seq.preempts + (1 if count_preempt else 0),
             img_k=img_k, img_v=img_v, nb=nb,
             tree_blocks=tree_blocks, slo=seq.slo, deadline_s=seq.deadline_s)
         self.alloc.free(seq.blocks)      # decref: prefix-tree refs survive
         self._clear_row(seq)
-        self.preemptions += 1
+        if count_preempt:
+            self.preemptions += 1
         return swap
 
     def _ensure_decode_capacity(self) -> List[_SwapState]:
@@ -1083,7 +1165,7 @@ class PagedInstance:
         _note_shape(self, ("prefill_paged", span))
         self.h2d_transfers += 2          # padded chunk + table-slice uploads
         logits, self.arena = self._fns["prefill_paged"](
-            self.ev.params, jnp.asarray(padded), self.arena,
+            self.params, jnp.asarray(padded), self.arena,
             jnp.asarray(self.tables[seq.row][:span]), start, true_c)
         seq.n_done += true_c
         self.prefill_chunks += 1
@@ -1185,13 +1267,13 @@ class PagedInstance:
         into the uploaded ``next`` buffer as device scalars, so a prefill
         completion never blocks the loop on its own argmax."""
         assert not self._inflight, "upload with stale in-flight decodes"
-        nxt = jnp.asarray(self._next[:B])
+        nxt = self._put_rows(self._next[:B])
         for pf in self._pending_first:
             nxt = nxt.at[pf.seq.row, 0].set(pf.tok)
         self._dev = {"next": nxt,
-                     "tables": jnp.asarray(self.tables[:B]),
-                     "lengths": jnp.asarray(self.lengths[:B]),
-                     "active": jnp.asarray(active[:B])}
+                     "tables": self._put_rows(self.tables[:B]),
+                     "lengths": self._put_rows(self.lengths[:B]),
+                     "active": self._put_rows(active[:B])}
         self.h2d_transfers += 4
         self._dev_B = B
         self._dev_active = active[:B].copy()
@@ -1288,6 +1370,16 @@ class PagedInstance:
                         self._land_first(seq.pending_first)  # its first token
                         self._ev_finished.append(seq)
                         self._release(seq)
+        if self.role == "prefill":
+            # a prefill worker never dispatches decode: land first-token
+            # readbacks whose async copies overlapped an earlier tick (the
+            # disagg layer extracts those sequences via handoff_out), skip
+            # table growth / decode dispatch / preemption entirely
+            self._land_ready()
+            return self._ev_finished, _tick_info(
+                prefill_s=prefill_s,
+                blocks_in_use=self.alloc.blocks_in_use(),
+                prefill_rids=prefill_rids, emitted=self._ev_emitted)
         # decode-time block pressure: grow tables on demand, swap victims
         # out when the arena is dry (PREEMPTED lifecycle state)
         preempted = self._ensure_decode_capacity() if self.preemption else []
@@ -1319,7 +1411,7 @@ class PagedInstance:
             _note_shape(self, ("decode_multi", B, k))
             t1 = time.perf_counter()
             toks, self.arena, nxt, ln = self._fns["decode_multi"](
-                self.ev.params, self.arena, self._dev["next"],
+                self.params, self.arena, self._dev["next"],
                 self._dev["tables"], self._dev["lengths"],
                 self._dev["active"], k=k)
             self._dev["next"], self._dev["lengths"] = nxt, ln
@@ -1382,6 +1474,16 @@ class _Session:
         self.queue_delays: List[float] = []
         self.ttfts: List[float] = []
         self.energy = 0.0
+        # per-role joules (disaggregation accounting): every charge is
+        # tagged with the instance's role — "both" for monolithic engines,
+        # "prefill"/"decode"/"handoff" under serving.disagg.  ``charge`` +
+        # ``meter`` keep the ``energy``/``meters`` accumulation order
+        # IDENTICAL to the untagged path, so monolithic numbers are
+        # bit-for-bit unchanged and role sums conserve by construction.
+        self.role_energy: Dict[str, float] = {}
+        self.meters_role: Dict[int, Dict[str, float]] = {}
+        self.handoffs = 0
+        self.handoff_pages = 0
         self.decode_steps = 0
         self.occ_frac_sum = 0.0
         self.inflight_sum = 0
@@ -1410,6 +1512,17 @@ class _Session:
         self.dispatches0 = sum(getattr(i, "decode_dispatches", 0)
                                for i in instances)
 
+    def charge(self, role: str, joules: float) -> None:
+        """Add session energy under a role tag (see ``role_energy``)."""
+        self.energy += joules
+        self.role_energy[role] = self.role_energy.get(role, 0.0) + joules
+
+    def meter(self, rid: int, role: str, joules: float) -> None:
+        """Add per-request energy under a role tag (see ``meters_role``)."""
+        self.meters[rid] += joules
+        mr = self.meters_role.setdefault(rid, {})
+        mr[role] = mr.get(role, 0.0) + joules
+
     def schedule(self, req: InferenceRequest) -> None:
         if req.arrival_s is None:
             self.core.submit(req.rid, self.t0, priority=req.priority,
@@ -1432,7 +1545,20 @@ class RealEngine:
     :class:`InferenceRequest`s with continuous batching through the
     ``ServingBackend`` protocol, measuring wall latencies and attributing
     occupancy-scaled energy (the calibrated stand-in for TPU telemetry) and
-    carbon (``ci_g_per_kwh``) per request."""
+    carbon (``ci_g_per_kwh``) per request.
+
+    ``mesh=`` shards every paged instance across a ("data", "model") device
+    mesh (``launch.mesh.make_mesh_for``); ``roles=`` splits the engine into
+    prefill and decode workers — constructing ``RealEngine(..., roles=...)``
+    transparently builds a :class:`serving.disagg.DisaggEngine` (same
+    ``ServingBackend`` surface, so callers and the fleet's ``probe_window``
+    drive it unchanged)."""
+
+    def __new__(cls, *args, **kwargs):
+        if cls is RealEngine and kwargs.get("roles"):
+            from repro.serving.disagg import DisaggEngine
+            return super().__new__(DisaggEngine)
+        return super().__new__(cls)
 
     def __init__(self, family: Sequence[EngineVariant], n_slots: int = 4,
                  max_len: int = 96, *, kv_layout: str = "slotted",
@@ -1443,10 +1569,16 @@ class RealEngine:
                  preemption: bool = False, ci_g_per_kwh: float = 0.0,
                  telemetry: Optional[Telemetry] = None,
                  decode_pipeline: bool = True, fused_steps: int = 8,
-                 quality_selector=None):
+                 quality_selector=None, mesh=None, roles=None):
         assert kv_layout in ("slotted", "paged"), kv_layout
         assert not (preemption and kv_layout == "slotted"), \
             "preemption requires the paged KV layout (slots never grow)"
+        assert mesh is None or kv_layout == "paged", \
+            "mesh sharding requires the paged KV layout"
+        assert not roles, \
+            "roles= is the DisaggEngine's (serving.disagg) — RealEngine " \
+            "dispatches there via __new__; do not pass roles to a subclass"
+        self.mesh = mesh
         self.family = {ev.variant.name: ev for ev in family}
         self.instances: List[Instance] = []
         self.n_slots = n_slots
@@ -1493,7 +1625,8 @@ class RealEngine:
         self.last_latencies: List[float] = []
         self.last_responses: List[InferenceResponse] = []
 
-    def _new_instance(self, ev: EngineVariant, chips: int):
+    def _new_instance(self, ev: EngineVariant, chips: int,
+                      role: str = "both"):
         if self.kv_layout == "paged":
             return PagedInstance(ev, chips, n_blocks=self.n_blocks,
                                  block_size=self.block_size,
@@ -1504,7 +1637,8 @@ class RealEngine:
                                  preemption=self.preemption,
                                  policy=self.policy,
                                  pipeline=self.decode_pipeline,
-                                 fused_steps=self.fused_steps)
+                                 fused_steps=self.fused_steps,
+                                 mesh=self.mesh, role=role)
         return Instance(ev, chips, self.n_slots, self.max_len)
 
     def configure(self, graph) -> float:
@@ -1534,6 +1668,26 @@ class RealEngine:
         self.last_reconfig_s = time.perf_counter() - t0
         return self.last_reconfig_s
 
+    # --- disaggregation hooks (overridden by serving.disagg) -----------------
+    def _profilers(self):
+        """Every phase profiler the engine repoints per session."""
+        return (self.profiler,)
+
+    def _takes(self, inst, resuming: bool) -> bool:
+        """Whether ``inst`` participates in admitting the queue head (the
+        DisaggEngine routes fresh work to prefill workers and swapped-out
+        images to decode workers; monolithic instances take everything)."""
+        return True
+
+    def _post_tick(self, completed: List[InferenceResponse]) -> None:
+        """End-of-step hook: the DisaggEngine extracts finished prefills
+        into ``BlockHandoff``s and places them on decode workers here."""
+
+    def _extra_pending(self) -> bool:
+        """Work the drain loop must wait on beyond queues and busy
+        instances (the DisaggEngine's in-transit handoff queue)."""
+        return False
+
     # --- ServingBackend protocol ---------------------------------------------
     def submit(self, req: InferenceRequest) -> None:
         """Enqueue a typed request.  The first submit after idle opens a
@@ -1549,7 +1703,8 @@ class RealEngine:
                 tel.registry = reg       # per-session registry (see obs)
             # phase profiling rides the telemetry opt-in: without a bundle
             # the profiler stays disabled and the hot path pays nothing
-            self.profiler.registry = reg if tel is not None else None
+            for prof in self._profilers():
+                prof.registry = reg if tel is not None else None
             self.policy.reset_holds()    # rids repeat across sessions
             self._session = _Session(
                 SchedulerCore(self.policy), self.instances, registry=reg,
@@ -1608,6 +1763,10 @@ class RealEngine:
                 want = s.variant_of.get(rid)
                 if want is not None and inst.ev.variant.name != want:
                     break
+                # role routing (disagg): fresh work → prefill workers,
+                # swapped/handed-off images → decode workers
+                if not self._takes(inst, rid in s.swapped):
+                    break
                 sig = inst.admission_signature()
                 if s.admit_gate.get(id(inst)) == (rid, sig):
                     break                # nothing changed since last failure
@@ -1649,8 +1808,8 @@ class RealEngine:
                 if dt > 0:               # slotted layout prefills at admit
                     self.profiler.observe("prefill_chunk", dt)
                 e_pf = inst.chips * PM.P_BUSY_W * dt   # prefill: busy power
-                s.energy += e_pf
-                s.meters[rid] += e_pf
+                s.charge(inst.role, e_pf)
+                s.meter(rid, inst.role, e_pf)
                 s.accounted_s[id(inst)] += dt
                 s.progressed = True
                 if state.remaining <= 0 and state.tokens:    # n_new == 1
@@ -1668,10 +1827,10 @@ class RealEngine:
             # and a k-step device window would delay a mid-window arrival's
             # prefill behind k queued decode steps
             done, info = inst.tick(s.rel(t_tick), allow_fused=not s.future)
-            s.energy += inst.chips * PM.P_BUSY_W * info["prefill_s"]
+            s.charge(inst.role, inst.chips * PM.P_BUSY_W * info["prefill_s"])
             for rid, dtc in info["prefill_rids"]:
-                s.meters[rid] += inst.chips * PM.P_BUSY_W * dtc
-                self.profiler.observe("prefill_chunk", dtc)
+                s.meter(rid, inst.role, inst.chips * PM.P_BUSY_W * dtc)
+                inst.profiler.observe("prefill_chunk", dtc)
             if info["decode_steps"]:
                 # info describes LANDED decode work: ``decode_steps`` model
                 # steps (>= 1 per landed dispatch, k per fused dispatch)
@@ -1682,10 +1841,10 @@ class RealEngine:
                 occ = info["occupied"]
                 e_dec = PM.instance_power_w(
                     inst.chips, occ / inst.capacity) * info["decode_s"]
-                s.energy += e_dec
+                s.charge(inst.role, e_dec)
                 share = e_dec / max(len(info["decode_rids"]), 1)
                 for rid in info["decode_rids"]:
-                    s.meters[rid] += share
+                    s.meter(rid, inst.role, share)
                 s.decode_steps += ksteps
                 s.occ_frac_sum += (occ / inst.capacity) * ksteps
                 s.inflight_sum += occ * ksteps
@@ -1744,6 +1903,7 @@ class RealEngine:
                                      slo=req.slo)
             for state in done:
                 completed.append(self._finish(state, inst))
+        self._post_tick(completed)
         return completed
 
     def drain(self) -> List[InferenceResponse]:
@@ -1756,7 +1916,8 @@ class RealEngine:
             return []
         stalled_once = False
         while s.future or s.core.has_pending() \
-                or any(i.busy for i in self.instances):
+                or any(i.busy for i in self.instances) \
+                or self._extra_pending():
             self.step()
             if s.progressed:
                 stalled_once = False
@@ -1847,14 +2008,26 @@ class RealEngine:
         wall = time.perf_counter() - s.t0
         for inst in self.instances:       # idle floor for unaccounted wall
             idle_s = max(wall - s.accounted_s[id(inst)], 0.0)
-            s.energy += inst.chips * PM.P_IDLE_W * idle_s
+            s.charge(inst.role, inst.chips * PM.P_IDLE_W * idle_s)
         # attribute the idle floor + carbon: per-request joules sum to the
         # engine total, gCO2 = joules × the serving window's intensity
         attributed = sum(r.energy_j for r in s.responses)
         idle_share = ((s.energy - attributed) / len(s.responses)
                       if s.responses else 0.0)
+        # per-role idle remainders: whatever each role charged beyond its
+        # metered per-request work (its idle floor + fp dust) spreads the
+        # same way, so a response's energy_by_role sums to its energy_j and
+        # role totals conserve against the session (disagg conservation)
+        n_resp = max(len(s.responses), 1)
+        role_rem = {
+            role: (total - sum(mr.get(role, 0.0)
+                               for mr in s.meters_role.values())) / n_resp
+            for role, total in s.role_energy.items()}
         for r in s.responses:
             r.energy_j += idle_share
+            mr = s.meters_role.get(r.rid, {})
+            r.energy_by_role = {role: mr.get(role, 0.0) + rem
+                                for role, rem in role_rem.items()}
             r.carbon_g = r.energy_j / 3.6e6 * self.ci_g_per_kwh
             if s.tracer is not None and r.rid in s.span_ids:
                 s.tracer.annotate(s.span_ids[r.rid], energy_j=r.energy_j,
@@ -1896,6 +2069,8 @@ class RealEngine:
         reg.counter("host_syncs").inc(syncs)
         reg.counter("h2d_transfers").inc(h2d)
         reg.counter("decode_dispatches").inc(dispatches)
+        reg.counter("handoffs").inc(s.handoffs)
+        reg.counter("handoff_pages").inc(s.handoff_pages)
         reg.gauge("wall_s").set(wall)
         served = int(reg.value("requests_served"))
         total_tokens = int(reg.value("tokens_generated"))
@@ -1940,6 +2115,17 @@ class RealEngine:
             "host_syncs": syncs,
             "h2d_transfers": h2d,
             "decode_dispatches": dispatches,
+            # disaggregation: sequences handed prefill→decode, pages moved,
+            # and the per-role joules split (all zero on monolithic engines;
+            # "both" carries the whole total there).  prefill + decode +
+            # handoff + both == energy_j exactly — the conservation check
+            # ``obs.validate.check_disagg_conservation`` enforces it.
+            "handoffs": s.handoffs,
+            "handoff_pages": s.handoff_pages,
+            "prefill_energy_j": s.role_energy.get("prefill", 0.0),
+            "decode_energy_j": s.role_energy.get("decode", 0.0),
+            "handoff_energy_j": s.role_energy.get("handoff", 0.0),
+            "both_energy_j": s.role_energy.get("both", 0.0),
         }
         if self.telemetry is not None and self.telemetry.feed is not None:
             # one exact segment per session: feed totals stay equal to the

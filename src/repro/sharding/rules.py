@@ -242,5 +242,39 @@ def cache_specs(cache_shape_tree, mesh, cfg: ModelConfig, *,
     return jax.tree_util.tree_map_with_path(spec, cache_shape_tree)
 
 
+def arena_spec(mesh, cfg: ModelConfig) -> P:
+    """PartitionSpec for the paged KV arena ``(L, n_blocks, bs, K, dh)``.
+
+    KV heads shard over ``model``; the block map dims (n_blocks, bs) stay
+    unsharded because block tables live host-side and index whole pages.
+
+    Unlike :func:`cache_specs`, non-divisible head counts are an explicit
+    ERROR here rather than a silent fallback: a paged arena has no
+    contiguous sequence dim to sequence-shard (blocks *are* the map), and
+    letting GSPMD pad inside the trailing head dims would resolve
+    ``d_head % model != 0`` by slicing partial-dh dot products that get
+    all-reduced at activation size on every donated decode step — the
+    glm4-like (n_kv_heads=2) failure mode the dense rules warn about.
+    """
+    n_model = mesh.shape[MODEL_AXIS]
+    if n_model == 1:
+        return P(None, None, None, None, None)
+    if cfg.n_kv_heads % n_model == 0:
+        return P(None, None, None, MODEL_AXIS, None)
+    raise ValueError(
+        f"paged KV arena cannot shard on the head dim: n_kv_heads="
+        f"{cfg.n_kv_heads} is not divisible by the mesh's model axis "
+        f"({n_model}), and padding would slice inside d_head "
+        f"({cfg.d_head} % {n_model} = {cfg.d_head % n_model}) — GSPMD would "
+        f"silently all-reduce partial-head products every decode step. "
+        f"Build the mesh with launch.mesh.make_mesh_for(n, model_parallel=m) "
+        f"for an m dividing n_kv_heads.")
+
+
+def arena_shardings(mesh, cfg: ModelConfig) -> NamedSharding:
+    """NamedSharding for every leaf of a paged arena ``{"k","v"}`` tree."""
+    return NamedSharding(mesh, arena_spec(mesh, cfg))
+
+
 def logits_spec(mesh) -> P:
     return P(data_axes(mesh), None, MODEL_AXIS)

@@ -155,6 +155,134 @@ def scenario_seq_sharded_decode_numerics():
                                rtol=2e-4, atol=2e-4)
 
 
+def _paged_workload(cfg, lens, seed=0, shared=12):
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(0, cfg.vocab_size, size=shared).astype(np.int32)
+    return [np.concatenate(
+        [pre, rng.integers(0, cfg.vocab_size, size=int(n)).astype(np.int32)])
+        for n in lens]
+
+
+def scenario_sharded_paged_decode_parity():
+    """One PagedInstance sharded across a ("data","model")=(4,2) mesh of 8
+    host devices (params under spec_for_param, KV arena over "model" on the
+    head dim, block tables host-side) is token-identical to the unsharded
+    engine on a mixed-length shared-prefix workload — radix prefix sharing
+    and the pipelined fused decode loop run unchanged on the sharded arena.
+    Also pins the arena rule's explicit non-divisible error on a real mesh
+    (glm4-like n_kv_heads=2 on a 4-way model axis)."""
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.core import config_graph as CG
+    from repro.launch.mesh import make_mesh_for
+    from repro.serving import engine as ENG
+    from repro.sharding import rules as SR
+
+    cfg = get_smoke_config("qwen3-1.7b").with_(n_layers=2, dtype=jnp.float32)
+    fam = ENG.build_engine_family(cfg, fracs=(1.0,))
+    g = CG.ConfigGraph.from_dict(cfg.name, {("x1", 16): 1})
+    prompts = _paged_workload(cfg, (6, 14, 9, 22, 6, 11), seed=1)
+
+    ref = ENG.RealEngine(fam, n_slots=4, max_len=64, kv_layout="paged",
+                         block_size=8, max_seqs=4)
+    ref.configure(g)
+    m_ref = ref._serve_prompts(prompts, n_new=10)
+
+    mesh = make_mesh_for(8, model_parallel=2)    # n_kv_heads=2 → divisible
+    assert mesh.shape["data"] == 4 and mesh.shape["model"] == 2
+    eng = ENG.RealEngine(fam, n_slots=4, max_len=64, kv_layout="paged",
+                         block_size=8, max_seqs=4, mesh=mesh)
+    eng.configure(g)
+    m = eng._serve_prompts(prompts, n_new=10)
+    assert set(ref.last_outputs) == set(eng.last_outputs)
+    for rid in ref.last_outputs:
+        np.testing.assert_array_equal(ref.last_outputs[rid],
+                                      eng.last_outputs[rid])
+    assert m["prefix_hit_tokens"] == m_ref["prefix_hit_tokens"] > 0
+    # the arena really is committed over "model" (not replicated)
+    inst = eng.instances[0]
+    assert not inst.arena["k"].sharding.is_fully_replicated
+
+    glm4 = get_smoke_config("glm4-9b")           # n_kv_heads=2
+    try:
+        SR.arena_spec(make_mesh_for(8, model_parallel=4), glm4)
+    except ValueError as e:
+        assert "n_kv_heads" in str(e)
+    else:
+        raise AssertionError("non-divisible arena sharding must error")
+
+
+def scenario_disagg_vs_monolithic_parity():
+    """Disaggregated prefill/decode workers on the 8-device mesh match the
+    monolithic engine bit-for-bit — INCLUDING through decode-side
+    preemption and partial (radix-tree-backed) swap-in on the decode
+    worker — and the per-role joules split conserves exactly."""
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.core import config_graph as CG
+    from repro.launch.mesh import make_mesh_for
+    from repro.obs.validate import check_disagg_conservation
+    from repro.serving import engine as ENG
+    from repro.serving.api import InferenceRequest, serve_workload
+
+    cfg = get_smoke_config("qwen3-1.7b").with_(n_layers=2, dtype=jnp.float32)
+    fam = ENG.build_engine_family(cfg, fracs=(1.0,))
+    g = CG.ConfigGraph.from_dict(cfg.name, {("x1", 16): 1})
+    prompts = _paged_workload(cfg, (6, 6, 6, 6), seed=5, shared=16)
+    n_new = 16
+
+    ref = ENG.RealEngine(fam, n_slots=4, max_len=48, kv_layout="paged",
+                         block_size=8, max_seqs=4, n_blocks=33)
+    ref.configure(g)
+    ref._serve_prompts(prompts, n_new=n_new)
+    assert ref.stats()["preemptions"] == 0
+
+    eng = ENG.RealEngine(fam, n_slots=4, max_len=48, kv_layout="paged",
+                         block_size=8, max_seqs=4, n_blocks=14,
+                         preemption=True, mesh=make_mesh_for(8, 2),
+                         roles={"prefill": 1, "decode": 1})
+    eng.configure(g)
+    reqs = [InferenceRequest(rid=i, prompt=p, max_new_tokens=n_new)
+            for i, p in enumerate(prompts)]
+    serve_workload(eng, reqs)
+    m = eng.stats()
+    assert m["handoffs"] == len(prompts)
+    assert m["preemptions"] >= 1, "starved decode arena must preempt"
+    assert (m["swapin_pages_copied"]
+            + m["partial_swapin_pages_saved"]) >= 1, "no swap-in happened"
+    assert m["partial_swapin_pages_saved"] >= 1, \
+        "decode-side radix tree must make the swap-in partial"
+    for rid in ref.last_outputs:
+        np.testing.assert_array_equal(ref.last_outputs[rid],
+                                      eng.last_outputs[rid])
+    check_disagg_conservation(m)
+    assert m["prefill_energy_j"] > 0 and m["decode_energy_j"] > 0
+
+
+def scenario_disagg_smoke():
+    """Fast 8-device disagg smoke for scripts/check.sh: sharded split
+    workers serve a tiny workload, hand off every sequence, and conserve
+    the role energy split."""
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.core import config_graph as CG
+    from repro.launch.mesh import make_mesh_for
+    from repro.obs.validate import check_disagg_conservation
+    from repro.serving import engine as ENG
+
+    cfg = get_smoke_config("qwen3-1.7b").with_(n_layers=2, dtype=jnp.float32)
+    fam = ENG.build_engine_family(cfg, fracs=(1.0,))
+    eng = ENG.RealEngine(fam, n_slots=2, max_len=32, kv_layout="paged",
+                         mesh=make_mesh_for(8, model_parallel=2),
+                         roles=(1, 1))
+    eng.configure(CG.ConfigGraph.from_dict(cfg.name, {("x1", 16): 1}))
+    prompts = _paged_workload(cfg, (5, 9, 7), seed=0, shared=0)
+    m = eng._serve_prompts(prompts, n_new=4)
+    assert m["served"] == len(prompts)
+    assert m["handoffs"] == len(prompts)
+    check_disagg_conservation(m)
+
+
 if __name__ == "__main__":
     name = sys.argv[1]
     globals()[f"scenario_{name}"]()

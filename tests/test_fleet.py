@@ -268,6 +268,43 @@ def test_fleet_region_engine_kv_layout_plumbing():
     assert region.server.engine.kv_layout == "paged"
 
 
+def test_fleet_region_engine_topology_builds_disagg():
+    """FleetConfig.engine_topology (region → (prefill, decode) workers)
+    makes that region's engine a DisaggEngine while unlisted regions stay
+    monolithic; probe_window drives the split engine unchanged through
+    ServingBackend, every probe hands off, and the role split conserves."""
+    pytest.importorskip("jax")
+    from repro.core import config_graph as CG
+    from repro.obs.validate import check_disagg_conservation
+    from repro.serving import backends as BK
+    from repro.serving import engine as ENG
+    from repro.serving.disagg import DisaggEngine
+    cfg = FS.FleetConfig(backend="real", engine_kv_layout="paged",
+                         engine_topology={"r0": (1, 1)})
+    fam = BK.build_real_family(cfg.engine_arch, cfg.engine_layers,
+                               fracs=(1.0,), seed=cfg.seed)
+    trace = CB.make_trace("CISO-March", hours=2)
+    region = FS._Region("r0", trace, fam[0].variant.family, cfg,
+                        engine_family=fam)
+    assert isinstance(region.server.engine, DisaggEngine)
+    assert region.server.engine.roles == {"prefill": 1, "decode": 1}
+    other = FS._Region("r1", trace, fam[0].variant.family, cfg,
+                       engine_family=fam)
+    assert type(other.server.engine) is ENG.RealEngine
+    g = CG.ConfigGraph.uniform(fam[0].variant.family, "x1", 16, 1)
+    m = region.server.probe_window(g, 1800.0)
+    assert m is not None and m["served"] == cfg.probe_requests
+    assert m["handoffs"] == cfg.probe_requests
+    check_disagg_conservation(m)
+    # the split needs the paged arena (block handoff): anything else is a
+    # config error at region build
+    bad = FS.FleetConfig(backend="real", engine_kv_layout="slotted",
+                         engine_topology={"r0": (1, 1)})
+    with pytest.raises(AssertionError, match="paged"):
+        FS._Region("r0", trace, fam[0].variant.family, bad,
+                   engine_family=fam)
+
+
 def test_fleet_region_forecast_policy_probe_end_to_end():
     """FleetConfig.engine_policy='carbon_forecast' builds the region's
     engine policy over the REGION'S forecaster (ForecastCIFn, not a raw

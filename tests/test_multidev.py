@@ -38,3 +38,15 @@ def test_gspmd_vs_single_device_numerics():
 
 def test_seq_sharded_decode_numerics():
     _run("seq_sharded_decode_numerics")
+
+
+def test_sharded_paged_decode_parity():
+    _run("sharded_paged_decode_parity")
+
+
+def test_disagg_vs_monolithic_parity():
+    _run("disagg_vs_monolithic_parity")
+
+
+def test_disagg_smoke():
+    _run("disagg_smoke")
